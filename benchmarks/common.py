@@ -1,0 +1,47 @@
+import sys
+import pathlib
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time in microseconds (results block_until_ready)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_graphs(small=False):
+    """The paper's graph-type mix, at CPU-tractable scale:
+    skewed (RMAT ~ TW/RM), uniform (~UR/social), grid (~US/GR roads)."""
+    from repro.graph.csr import rmat_graph, uniform_graph, grid_graph
+    if small:
+        return {
+            "rmat": rmat_graph(10, 8, seed=1),
+            "uniform": uniform_graph(1024, 8, seed=1),
+            "grid": grid_graph(32, seed=1),
+        }
+    return {
+        "rmat": rmat_graph(13, 8, seed=1),       # 8k vertices, 64k edges
+        "uniform": uniform_graph(8192, 8, seed=1),
+        "grid": grid_graph(96, seed=1),           # 9.2k vertices, large diam
+    }

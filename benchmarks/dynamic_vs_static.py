@@ -1,0 +1,128 @@
+"""Paper Tables 2–4: dynamic vs static processing per backend × update %.
+
+For each (backend, algorithm, graph, percent): time
+  static  = full recomputation on the post-update graph (the paper's
+            static baseline: "updates performed at the start, properties
+            calculated from scratch"), and
+  dynamic = batched OnDelete/Decremental + OnAdd/Incremental processing.
+Derived column reports the dynamic-over-static speedup — the paper's
+headline quantity (expected >1 at low %, crossing below 1 as % grows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import timeit, emit, bench_graphs
+from repro.graph import build_csr, random_updates
+from repro.core.engine import JnpEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.core.dist import DistEngine
+from repro.core.frontier_engine import FrontierEngine
+from repro.algos import sssp, pagerank
+
+PERCENTS = (1, 5, 10, 20)
+ENGINES = {"jnp": JnpEngine, "pallas": PallasEngine, "dist": DistEngine,
+           "frontier": FrontierEngine}
+
+
+def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
+        small=False):
+    # NB: 'dist' is correct but slow on the CPU host (shard_map emulation);
+    # pass engines=(..., "dist") explicitly for the full table.
+    graphs = bench_graphs(small)
+    for gname, (n, edges, w) in graphs.items():
+        keep = edges[:, 0] != edges[:, 1]
+        csr = build_csr(n, edges[keep], w[keep])
+        for ename in engines:
+            eng = ENGINES[ename]()
+            for pct in percents:
+                ups = random_updates(csr, percent=pct, seed=42)
+                cap = max(2 * ups.num_adds, 16)
+                batch = max(ups.num_adds, ups.num_dels, 1)
+
+                # ---- SSSP ----
+                g0 = eng.prepare(csr, diff_capacity=cap)
+                props0 = sssp.static_sssp(eng, g0, 0)
+
+                def dyn():
+                    return sssp.dyn_sssp(eng, g0, 0, ups, batch,
+                                         props=props0)[1]["dist"]
+
+                def stat():
+                    g1 = eng.prepare(csr, diff_capacity=cap)
+                    b = ups.batch(0, max(ups.num_adds, ups.num_dels, 1))
+                    g1 = eng.update_del(g1, b)
+                    g1 = eng.update_add(g1, b)
+                    return sssp.static_sssp(eng, g1, 0)["dist"]
+
+                t_dyn = timeit(dyn, iters=2)
+                t_stat = timeit(stat, iters=2)
+                emit(f"sssp/{ename}/{gname}/pct{pct}/dynamic", t_dyn,
+                     f"speedup_vs_static={t_stat / max(t_dyn, 1):.2f}")
+                emit(f"sssp/{ename}/{gname}/pct{pct}/static", t_stat, "")
+
+                # ---- PageRank ----
+                pr0 = pagerank.static_pr(eng, g0)
+
+                def dyn_pr():
+                    return pagerank.dyn_pr(eng, g0, ups, batch,
+                                           props=pr0)[1]["pr"]
+
+                def stat_pr():
+                    g1 = eng.prepare(csr, diff_capacity=cap)
+                    b = ups.batch(0, max(ups.num_adds, ups.num_dels, 1))
+                    g1 = eng.update_del(g1, b)
+                    g1 = eng.update_add(g1, b)
+                    return pagerank.static_pr(eng, g1)["pr"]
+
+                t_dyn = timeit(dyn_pr, iters=2)
+                t_stat = timeit(stat_pr, iters=2)
+                emit(f"pr/{ename}/{gname}/pct{pct}/dynamic", t_dyn,
+                     f"speedup_vs_static={t_stat / max(t_dyn, 1):.2f}")
+                emit(f"pr/{ename}/{gname}/pct{pct}/static", t_stat, "")
+
+
+def run_tc(percents=(1, 5), engines=("jnp",), small=True):
+    """TC separately (wedge enumeration is O(E·max_deg) — uniform graphs
+    only at bench scale, mirroring the paper's TC DNFs on skewed MPI)."""
+    from repro.algos import triangles, oracles
+    from repro.graph.updates import UpdateStream
+    from repro.graph.csr import uniform_graph
+    n, edges, w = uniform_graph(512 if small else 2048, 6, seed=2)
+    keep = edges[:, 0] != edges[:, 1]
+    e, w2 = oracles.symmetrize(edges[keep], w[keep])
+    csr = build_csr(n, e)
+    for ename in engines:
+        eng = ENGINES[ename]()
+        for pct in percents:
+            ups0 = random_updates(csr, percent=pct, seed=3)
+            adds = np.stack([ups0.adds, ups0.adds[:, [1, 0, 2]]],
+                            axis=1).reshape(-1, 3)
+            dels = np.stack([ups0.dels, ups0.dels[:, [1, 0]]],
+                            axis=1).reshape(-1, 2)
+            ups = UpdateStream(adds=adds, dels=dels)
+            cap = max(2 * ups.num_adds, 16)
+            g0 = eng.prepare(csr, diff_capacity=cap)
+            c0 = triangles.static_tc(eng, g0)
+            batch = max(ups.num_adds, ups.num_dels, 1)
+
+            def dyn():
+                return triangles.dyn_tc(eng, g0, ups, batch, count=c0)[1]
+
+            def stat():
+                g1 = eng.prepare(csr, diff_capacity=cap)
+                b = ups.batch(0, batch)
+                g1 = eng.update_del(g1, b)
+                g1 = eng.update_add(g1, b)
+                return triangles.static_tc(eng, g1)
+
+            t_dyn = timeit(dyn, iters=2)
+            t_stat = timeit(stat, iters=2)
+            emit(f"tc/{ename}/uniform/pct{pct}/dynamic", t_dyn,
+                 f"speedup_vs_static={t_stat / max(t_dyn, 1):.2f}")
+            emit(f"tc/{ename}/uniform/pct{pct}/static", t_stat, "")
+
+
+if __name__ == "__main__":
+    run()
+    run_tc()

@@ -1,0 +1,48 @@
+"""diff-CSR merge-cadence sweep (paper §3.5: "after a configurable number
+of batches ... merged into the main CSR").
+
+Processes a long update stream in batches while varying how often the
+diff chain is compacted; reports per-batch dynamic-SSSP time and the
+final diff occupancy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import timeit, emit
+from repro.graph import build_csr, random_updates
+from repro.graph.csr import uniform_graph
+from repro.core.engine import JnpEngine
+from repro.algos import sssp
+
+
+def run(n=4096, deg=8, pct=20, batch=64, cadences=(0, 1, 4, 16)):
+    n, edges, w = uniform_graph(n, deg, seed=5)
+    keep = edges[:, 0] != edges[:, 1]
+    csr = build_csr(n, edges[keep], w[keep])
+    eng = JnpEngine()
+    ups = random_updates(csr, percent=pct, seed=11)
+    nb = ups.num_batches(batch)
+
+    for cadence in cadences:
+        def process():
+            g = eng.prepare(csr, diff_capacity=2 * batch * nb)
+            props = sssp.static_sssp(eng, g, 0)
+            for i, b in enumerate(ups.batches(batch)):
+                gb, props_b = sssp.dyn_sssp(
+                    eng, g, 0,
+                    type(ups)(adds=ups.adds[i * batch:(i + 1) * batch],
+                              dels=ups.dels[i * batch:(i + 1) * batch]),
+                    batch, props=props)
+                g, props = gb, props_b
+                if cadence and (i + 1) % cadence == 0:
+                    g = eng.merge(g)
+            return g
+
+        t = timeit(process, warmup=0, iters=1)
+        tag = f"merge_every_{cadence}" if cadence else "never_merge"
+        emit(f"merge_policy/sssp/{tag}", t, f"batches={nb}")
+
+
+if __name__ == "__main__":
+    run()

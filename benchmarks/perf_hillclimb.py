@@ -1,0 +1,81 @@
+"""§Perf hillclimb driver: lower + analyze chosen cells under a given
+tuning variant, append results to benchmarks/results/perf_iters.json.
+
+Usage:
+  PYTHONPATH=src python benchmarks/perf_hillclimb.py \
+      --cell gemma2-9b:long_500k --variant opt --label cache-dh
+
+Each record keeps the roofline terms so iterations are comparable:
+  compute_s / memory_s / collective_s (per-chip, TPU v5e constants).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 2 * 50e9
+
+OUT = pathlib.Path(__file__).resolve().parent / "results" / \
+    "perf_iters.json"
+
+
+def measure(arch: str, shape: str, variant: str) -> dict:
+    from repro.launch.dryrun import lower_cell, analyze
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    lowered, compiled = lower_cell(arch, shape, mesh, False, tuning=variant)
+    rec = analyze(compiled, 256)
+    hc = rec["hlo_cost"]
+    out = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "compute_s": hc["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": hc["bytes_fused_per_device"] / HBM_BW,
+        "collective_s": hc["collective_bytes_per_device"] / ICI_BW,
+        "flops_per_device": hc["flops_per_device"],
+        "bytes_fused_per_device": hc["bytes_fused_per_device"],
+        "collective_bytes_per_device": hc["collective_bytes_per_device"],
+        "bytes_breakdown": {k[6:]: v for k, v in hc.items()
+                            if k.startswith("bytes_")},
+        "coll_breakdown": {k[5:]: v for k, v in hc.items()
+                           if k.startswith("coll_")},
+        "compile_s": round(time.time() - t0, 1),
+    }
+    out["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: out[k])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch:shape, e.g. gemma2-9b:long_500k")
+    ap.add_argument("--variant", default="opt",
+                    choices=["baseline", "opt"])
+    ap.add_argument("--label", default="")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    rec = measure(arch, shape, args.variant)
+    rec["label"] = args.label
+    hist = json.loads(OUT.read_text()) if OUT.exists() else []
+    hist.append(rec)
+    OUT.write_text(json.dumps(hist, indent=1))
+    print(json.dumps({k: v for k, v in rec.items()
+                      if not isinstance(v, dict)}, indent=1))
+    print("bytes:", {k: f"{v:.2e}" for k, v in
+                     rec["bytes_breakdown"].items()})
+    print("coll :", {k: f"{v:.2e}" for k, v in
+                     rec["coll_breakdown"].items()})
+
+
+if __name__ == "__main__":
+    main()

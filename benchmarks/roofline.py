@@ -1,0 +1,120 @@
+"""Roofline analysis over the dry-run artifacts (brief §ROOFLINE).
+
+Per (arch × shape) single-pod cell:
+  compute   = HLO_FLOPs        / (chips × 197e12 bf16 FLOP/s)
+  memory    = HLO_bytes        / (chips × 819e9  B/s HBM)
+  collective= collective_bytes / (chips × 2 × 50e9 B/s ICI)
+
+Notes on terms:
+  * cost_analysis() reports whole-program (global) FLOPs/bytes for the
+    SPMD module; dividing by chip count gives the per-chip rate the
+    roofline needs.
+  * collective_bytes comes from the HLO parse in launch/dryrun.py
+    (result-shape volume per collective op — all-gather counts its
+    gathered output once).
+  * MODEL_FLOPS = 6·N(_active)·tokens for train; 2·N·tokens for a
+    forward-only prefill; 2·N_active·1 per decoded token.
+
+Emits the EXPERIMENTS.md §Roofline table and a machine-readable JSON.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.archs import REGISTRY, SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 2 * 50e9            # 2 usable links × 50 GB/s (conservative)
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun.json"
+OUT = pathlib.Path(__file__).resolve().parent / "results" / "roofline.json"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(mesh: str = "single") -> dict:
+    """Roofline terms per cell from the trip-count-aware HLO cost model
+    (rec['hlo_cost'], see repro/launch/hlo_cost.py — all PER-DEVICE)."""
+    res = json.loads(RESULTS.read_text())
+    out = {}
+    for key, rec in res.items():
+        arch, shape_name, mname = key.split("|")
+        if mname != mesh or not rec.get("ok"):
+            continue
+        hc = rec.get("hlo_cost")
+        if not hc:
+            continue
+        chips = rec["n_chips"]
+        comp = hc["flops_per_device"] / PEAK_FLOPS
+        mem = hc["bytes_fused_per_device"] / HBM_BW
+        coll = hc["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute_s": comp, "memory_s": mem, "collective_s": coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(arch, shape_name)
+        useful = (mf / chips) / hc["flops_per_device"] \
+            if hc["flops_per_device"] else 0.0
+        bound = max(terms.values())
+        # roofline fraction: ideal useful-compute time / the bounding term
+        ideal_compute = mf / (chips * PEAK_FLOPS)
+        frac = ideal_compute / bound if bound else 0.0
+        out[f"{arch}|{shape_name}"] = {
+            **terms,
+            "dominant": dom.replace("_s", ""),
+            "model_flops": mf,
+            "hlo_flops_per_device": hc["flops_per_device"],
+            "useful_flop_ratio": useful,
+            "roofline_fraction": frac,
+            "collective_count": hc.get("collective_count", 0),
+            "hbm_temp_gib": rec.get("temp_size_in_bytes", 0) / 2**30,
+        }
+    return out
+
+
+def table(rows: dict) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful FLOP ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for key in sorted(rows):
+        r = rows[key]
+        a, s = key.split("|")
+        lines.append(
+            f"| {a} | {s} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def run():
+    main()
+
+
+def main():
+    rows = analyze("single")
+    OUT.write_text(json.dumps(rows, indent=1, sort_keys=True))
+    print(table(rows))
+    worst = sorted(rows.items(), key=lambda kv: kv[1]["roofline_fraction"])
+    coll = sorted(rows.items(), key=lambda kv: -kv[1]["collective_s"])
+    print("\nworst roofline fraction:", worst[0][0] if worst else "-")
+    print("most collective-bound:", coll[0][0] if coll else "-")
+
+
+if __name__ == "__main__":
+    main()

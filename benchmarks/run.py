@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one suite per paper table/figure.
+
+  dynamic_vs_static   paper Tables 2–4 / Figs 10–18 (dyn vs static × pct)
+  tc                  paper TC columns (wedge enumeration, uniform graphs)
+  merge_policy        diff-CSR merge cadence ablation (paper §3.5 knob)
+  scheduling          backend scheduling trade-offs (paper Table 6 analogue)
+  roofline            §Roofline terms per (arch × shape × mesh) from the
+                      dry-run artifacts (reads benchmarks/results/dryrun.json)
+
+CSV lines: ``name,us_per_call,derived`` on stdout.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--suite S] [--small]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "dynamic_vs_static", "tc", "merge_policy",
+                             "scheduling", "static_baselines", "roofline"])
+    ap.add_argument("--small", action="store_true", default=True,
+                    help="reduced graph sizes (CI-speed; default on CPU)")
+    ap.add_argument("--full", dest="small", action="store_false",
+                    help="full bench-scale graphs")
+    args = ap.parse_args()
+
+    if args.suite in ("all", "dynamic_vs_static"):
+        import dynamic_vs_static
+        dynamic_vs_static.run(small=args.small)
+    if args.suite in ("all", "tc"):
+        import dynamic_vs_static
+        dynamic_vs_static.run_tc(small=True)
+    if args.suite in ("all", "merge_policy"):
+        import merge_policy
+        merge_policy.run()
+    if args.suite in ("all", "scheduling"):
+        import scheduling_ablation
+        scheduling_ablation.run(small=args.small)
+    if args.suite in ("all", "static_baselines"):
+        import static_baselines
+        static_baselines.run(small=True)
+    if args.suite in ("all", "roofline"):
+        import roofline
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

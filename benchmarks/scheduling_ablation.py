@@ -1,0 +1,35 @@
+"""Paper Table 6 analogue: scheduling/lowering ablation for SSSP.
+
+The paper compares OpenMP dynamic vs static scheduling; the TPU analogue
+is the choice of relaxation lowering: segment-reduce (jnp), ELL kernel
+with K ∈ {4,8,16} (pallas row-split width = the work-per-row 'schedule'),
+and the distributed lowering.
+"""
+from __future__ import annotations
+
+from common import timeit, emit, bench_graphs
+from repro.graph import build_csr
+from repro.core.engine import JnpEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.core.dist import DistEngine
+from repro.algos import sssp
+
+
+def run(small=False):
+    graphs = bench_graphs(small)
+    for gname, (n, edges, w) in graphs.items():
+        keep = edges[:, 0] != edges[:, 1]
+        csr = build_csr(n, edges[keep], w[keep])
+        variants = [("jnp-segment", JnpEngine()),
+                    ("dist", DistEngine()),
+                    ("ell-k4", PallasEngine(k=4)),
+                    ("ell-k8", PallasEngine(k=8)),
+                    ("ell-k16", PallasEngine(k=16))]
+        for vname, eng in variants:
+            g = eng.prepare(csr, diff_capacity=16)
+            t = timeit(lambda: sssp.static_sssp(eng, g, 0)["dist"], iters=2)
+            emit(f"sched/sssp/{gname}/{vname}", t, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Paper Tables 5/7/8 analogue: static-algorithm comparison.
+
+The paper benches its static codegen against Galois/Ligra/Green-Marl/
+Gunrock — none of which exist in this offline TPU container — so the
+comparison here is between *our* lowerings and two reference baselines
+implementable in the same environment:
+
+  * ``scipy-free dense``: PR as dense matrix power iteration and SSSP as
+    dense min-plus Bellman-Ford (the O(n²) "obvious" implementation — a
+    Ligra-like frontier-free baseline);
+  * ``numpy-csr``: host NumPy CSR relaxation loop (OpenMP-ish scalar
+    baseline, no JIT).
+
+Emits speedups of each engine over the baselines per graph family.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import timeit, emit, bench_graphs
+from repro.graph import build_csr
+from repro.core.engine import JnpEngine
+from repro.core.dist import DistEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.algos import sssp, pagerank, oracles
+
+
+def dense_pr(n, edges, iters=30, delta=0.85):
+    A = np.zeros((n, n), np.float32)
+    A[edges[:, 1], edges[:, 0]] = 1.0
+    deg = np.maximum(A.sum(axis=0), 1.0)
+    M = A / deg
+    pr = np.full(n, 1.0 / n, np.float32)
+    for _ in range(iters):
+        pr = (1 - delta) / n + delta * (M @ pr)
+    return pr
+
+
+def dense_sssp(n, edges, w, src=0):
+    INF = np.int64(1) << 40
+    D = np.full((n, n), INF, np.int64)
+    np.minimum.at(D, (edges[:, 0], edges[:, 1]), w.astype(np.int64))
+    dist = np.full(n, INF, np.int64)
+    dist[src] = 0
+    for _ in range(n):
+        new = np.minimum(dist, (dist[:, None] + D).min(axis=0))
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def numpy_csr_sssp(csr, src=0):
+    n = csr.n
+    offs = np.asarray(csr.offsets)
+    dst = np.asarray(csr.dst)
+    w = np.asarray(csr.w)
+    INF = np.int64(1) << 40
+    dist = np.full(n, INF, np.int64)
+    dist[src] = 0
+    frontier = [src]
+    while frontier:
+        nxt = set()
+        for u in frontier:
+            du = dist[u]
+            for i in range(offs[u], offs[u + 1]):
+                v = dst[i]
+                nd = du + w[i]
+                if nd < dist[v]:
+                    dist[v] = nd
+                    nxt.add(v)
+        frontier = list(nxt)
+    return dist
+
+
+def run(small=True):
+    graphs = bench_graphs(small)
+    engines = [("jnp", JnpEngine()), ("dist", DistEngine()),
+               ("pallas", PallasEngine())]
+    for gname, (n, edges, w) in graphs.items():
+        keep = edges[:, 0] != edges[:, 1]
+        edges, w = edges[keep], w[keep]
+        csr = build_csr(n, edges, w)
+
+        t_dense_pr = timeit(lambda: dense_pr(n, edges), iters=1, warmup=0)
+        t_dense_ss = timeit(lambda: dense_sssp(n, edges, w), iters=1,
+                            warmup=0)
+        t_np_ss = timeit(lambda: numpy_csr_sssp(csr), iters=1, warmup=0)
+        emit(f"static/{gname}/baseline-dense/pr", t_dense_pr, "")
+        emit(f"static/{gname}/baseline-dense/sssp", t_dense_ss, "")
+        emit(f"static/{gname}/baseline-numpycsr/sssp", t_np_ss, "")
+
+        for ename, eng in engines:
+            g = eng.prepare(csr, diff_capacity=16)
+            t_pr = timeit(lambda: pagerank.static_pr(eng, g)["pr"], iters=2)
+            t_ss = timeit(lambda: sssp.static_sssp(eng, g, 0)["dist"],
+                          iters=2)
+            emit(f"static/{gname}/{ename}/pr", t_pr,
+                 f"speedup_vs_dense={t_dense_pr / max(t_pr, 1):.2f}")
+            emit(f"static/{gname}/{ename}/sssp", t_ss,
+                 f"speedup_vs_dense={t_dense_ss / max(t_ss, 1):.2f};"
+                 f"vs_numpycsr={t_np_ss / max(t_ss, 1):.2f}")
+
+
+if __name__ == "__main__":
+    run()

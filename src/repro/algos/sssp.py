@@ -1,0 +1,168 @@
+"""Dynamic SSSP — paper Fig. 21, staged against the engine interface.
+
+staticSSSP   : Bellman-Ford-style fixedPoint over modified frontier.
+Incremental  : same sweep seeded from activeOnAdd vertices.
+Decremental  : phase 1 parent-subtree invalidation, phase 2 pull-repair.
+dyn_sssp     : the Batch / OnDelete / OnAdd driver (paper Fig. 3).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import EdgeSweep, Reduce
+from repro.core.engine import Engine, Props
+from repro.graph.csr import INT, INF_W
+from repro.graph.diffcsr import BOOL
+from repro.graph.updates import UpdateStream
+
+NO_PARENT = jnp.asarray(-1, INT)
+
+
+def _relax_sweep() -> EdgeSweep:
+    """forall v filter(modified): forall nbr:
+       <nbr.dist, nbr.modified_nxt, nbr.parent> = <Min(nbr.dist, v.dist+w), True, v>"""
+    def edge_fn(s, d, w):
+        cand = s["dist"] + w
+        elig = s["modified"] & (s["dist"] < INF_W)
+        return {"dist": (cand, elig)}
+
+    def post_fn(p, red, hit):
+        better = hit["dist"] & (red["dist"] < p["dist"])
+        return {
+            **p,
+            "dist": jnp.where(better, red["dist"], p["dist"]),
+            "parent": jnp.where(better, red["parent"], p["parent"]),
+            "modified": better,           # modified = modified_nxt
+        }
+
+    return EdgeSweep(edge_fn=edge_fn,
+                     reduces={"dist": Reduce("min"),
+                              "parent": Reduce("argmin", of="dist")},
+                     post_fn=post_fn,
+                     gather_form={"dist": (
+                         lambda p: jnp.where(
+                             p["modified"] & (p["dist"] < INF_W),
+                             p["dist"], INF_W).astype(INT), True)},
+                     frontier="modified")
+
+
+def init_props(engine: Engine, source: int) -> Props:
+    iota = jnp.arange(engine.n_pad, dtype=INT)
+    return {
+        "dist": jnp.where(iota == source, 0, INF_W).astype(INT),
+        "parent": engine.full(-1, INT),
+        "modified": (iota == source),
+    }
+
+
+def static_sssp(engine: Engine, g, source: int, max_iter: int = 1 << 30) -> Props:
+    props = init_props(engine, source)
+    return engine.fixed_point(
+        g, _relax_sweep(), props,
+        cond_fn=lambda p, it, col: col.any(p["modified"]), max_iter=max_iter)
+
+
+def incremental(engine: Engine, g, props: Props, max_iter: int = 1 << 30) -> Props:
+    """props['modified'] seeds the affected frontier (activeOnAdd)."""
+    return engine.fixed_point(
+        g, _relax_sweep(), props,
+        cond_fn=lambda p, it, col: col.any(p["modified"]), max_iter=max_iter)
+
+
+def _phase1(p: Props) -> Props:
+    """Invalidate the shortest-path subtree below deleted tree edges by
+    chasing parent pointers to a fixed point (paper's decremental
+    pre-phase).  Module-level + jitted so the trace caches across
+    batches of a stream."""
+    def cond(state):
+        changed, pp = state
+        return changed
+
+    def body(state):
+        _, pp = state
+        par = jnp.clip(pp["parent"], 0, pp["parent"].shape[0] - 1)
+        hitp = (pp["parent"] >= 0) & pp["modified"][par] & ~pp["modified"]
+        new = {
+            **pp,
+            "dist": jnp.where(hitp, INF_W, pp["dist"]),
+            "parent": jnp.where(hitp, NO_PARENT, pp["parent"]),
+            "modified": pp["modified"] | hitp,
+        }
+        return jnp.any(hitp), new
+
+    _, out = jax.lax.while_loop(cond, body, (jnp.asarray(True), p))
+    return out
+
+
+_phase1_jit = jax.jit(_phase1)
+
+
+def decremental(engine: Engine, g, props: Props, max_iter: int = 1 << 30) -> Props:
+    props = engine.vertex_map(g, _phase1_jit, props)
+
+    # Phase 2: repair the invalidated region.  The paper's listing pulls
+    # over in-edges of modified vertices; its §6.2 notes a push-based
+    # variant "has the potential to be more efficient" — we use it: the
+    # surviving labels are valid upper bounds (deletions only increase
+    # distances; unaffected vertices keep intact shortest-path trees), so
+    # push relaxation seeded at the repair BOUNDARY (finite-dist vertices
+    # with an edge into the invalidated set) converges to the true
+    # distances — and starts sparse, where the FrontierEngine wins.
+    finite = props["dist"] < INF_W
+    if hasattr(engine, "src_flags_from_dst"):
+        boundary = engine.src_flags_from_dst(
+            g.g if hasattr(g, "g") else g, props["modified"]) & finite
+    else:
+        boundary = finite            # dense seed (still correct)
+    props = {**props, "modified": boundary}
+    props = engine.fixed_point(
+        g, _relax_sweep(), props,
+        cond_fn=lambda p, it, col: col.any(p["modified"]),
+        max_iter=max_iter)
+    return props
+
+
+# ---------------------------------------------------------------------------
+# Dynamic driver (paper Fig. 3): Batch { OnDelete; updateCSRDel; Decremental;
+#                                        OnAdd; updateCSRAdd; Incremental }
+# ---------------------------------------------------------------------------
+
+def dyn_sssp(engine: Engine, g, source: int, stream: UpdateStream,
+             batch_size: int, props: Props | None = None):
+    if props is None:
+        props = static_sssp(engine, g, source)
+
+    for batch in stream.batches(batch_size):
+        # --- OnDelete pre-processing --------------------------------------
+        def on_delete(p: Props) -> Props:
+            tree_edge = (p["parent"][jnp.clip(batch.del_dst, 0, engine.n_pad - 1)]
+                         == batch.del_src) & batch.del_mask
+            tgt = jnp.where(tree_edge, batch.del_dst, engine.n_pad)
+            dist = p["dist"].at[tgt].set(INF_W, mode="drop")
+            parent = p["parent"].at[tgt].set(NO_PARENT, mode="drop")
+            modified = p["modified"].at[tgt].set(True, mode="drop")
+            return {**p, "dist": dist, "parent": parent, "modified": modified}
+
+        props = {**props, "modified": jnp.zeros_like(props["modified"])}
+        props = engine.vertex_map(g, on_delete, props)
+        g = engine.update_del(g, batch)
+        props = decremental(engine, g, props)
+
+        # --- OnAdd pre-processing ------------------------------------------
+        g = engine.update_add(g, batch)
+
+        def on_add(p: Props) -> Props:
+            src_d = p["dist"][jnp.clip(batch.add_src, 0, engine.n_pad - 1)]
+            dst_d = p["dist"][jnp.clip(batch.add_dst, 0, engine.n_pad - 1)]
+            improves = (dst_d > src_d + batch.add_w) & batch.add_mask
+            tgt = jnp.where(improves, batch.add_src, engine.n_pad)
+            modified = p["modified"].at[tgt].set(True, mode="drop")
+            return {**p, "modified": modified}
+
+        props = {**props, "modified": jnp.zeros_like(props["modified"])}
+        props = engine.vertex_map(g, on_add, props)
+        props = incremental(engine, g, props)
+    return g, props

@@ -1,0 +1,566 @@
+"""Code generation: analysed AST → staged JAX programs on the Engine API.
+
+This is the paper's backend (§4): where StarPlat emits OpenMP / MPI /
+CUDA C++, we *stage* the same aggregate constructs into the engine
+interface (`repro.core.engine.Engine`), so one compiled Program runs on
+any of the three TPU-native backends ('jnp' | 'dist' | 'pallas').
+
+Lowering map (paper construct → engine op):
+
+  forall (v in g.nodes())           elementwise    → engine.vertex_map
+  forall(v) { forall(nbr in
+      g.neighbors/nodes_to(v)) }    edge sweep     → EdgeSweep + reduces
+  nested wedge loops / batch+nbr    wedge sweep    → engine.count_wedges
+  fixedPoint until (f : !p)         iteration      → engine.fixed_point
+  do {...} while (scalar-cond)      iteration      → engine.fixed_point
+  while (!f) { f=True; forall... }  iteration      → fixed_point / while
+  Batch(U : bs)                     host loop over UpdateStream batches
+  OnAdd/OnDelete                    masked scatters / batch_edge_flags
+  g.updateCSRAdd/Del                engine.update_add/del (diff-CSR)
+  g.propagateNodeFlags(p)           engine.propagate_flags
+  <x.a,x.b,x.c> = <Min(..),True,v>  Reduce(min) + or-ride + argmin
+  if (x.p > e) { x.p = e; x.q = v }  Reduce(min) + argmin   (race→combiner)
+
+Races are *re-associated* into deterministic segment reductions rather
+than guarded by atomics — the TPU-native synchronization (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsl import ast_nodes as A
+from repro.core.dsl.analysis import analyze, SemanticError
+from repro.core.dsl.parser import parse
+from repro.core.ir import EdgeSweep, Reduce
+from repro.core.engine import Engine
+from repro.graph.csr import CSR, INT, INF_W
+from repro.graph.diffcsr import BOOL
+from repro.graph.updates import UpdateStream, UpdateBatch
+
+F32 = jnp.float32
+_DTYPES = {"int": INT, "long": INT, "float": F32, "double": F32,
+           "bool": BOOL}
+_BIG = 1 << 30
+
+
+class CodegenError(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Runtime value wrappers
+# ---------------------------------------------------------------------------
+
+class Box:
+    """Mutable cell so props passed to callees reflect writes back."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value=None):
+        self.value = value
+
+
+@dataclasses.dataclass
+class PropRef:
+    """A vertex- or edge-property binding (name local to this frame)."""
+    name: str
+    elem: str                  # 'int' | 'float' | 'bool'
+    box: Box
+    is_edge: bool = False
+
+    @property
+    def dtype(self):
+        return _DTYPES[self.elem]
+
+
+@dataclasses.dataclass
+class GraphRef:
+    box: Box                   # engine graph handle
+
+
+@dataclasses.dataclass
+class UpdatesRef:
+    stream: Optional[UpdateStream]
+    selector: str = "both"     # 'both' | 'del' | 'add'
+
+
+@dataclasses.dataclass
+class NodeIdx:
+    """A node-typed value: a scalar index or a lane array of indices."""
+    idx: Any
+
+
+@dataclasses.dataclass
+class EdgeRef:
+    """edge e = g.get_edge(a, b): endpoints remembered symbolically."""
+    a: Any
+    b: Any
+    weight: Any = None         # bound lane weights where known
+
+
+@dataclasses.dataclass
+class RunResult:
+    g: Any
+    props: Dict[str, np.ndarray]
+    value: Any = None
+
+
+# ---------------------------------------------------------------------------
+# Frames
+# ---------------------------------------------------------------------------
+
+class Frame:
+    """Per-function environment; shares engine/graph with its caller."""
+
+    def __init__(self, engine: Engine, parent: Optional["Frame"] = None):
+        self.engine = engine
+        self.env: Dict[str, Any] = {}
+        self.parent = parent
+        self.current_batch: Optional[UpdateBatch] = None
+        self.ret = None
+        if parent is not None:
+            self.current_batch = parent.current_batch
+
+    def lookup(self, name: str):
+        f: Optional[Frame] = self
+        while f is not None:
+            if name in f.env:
+                return f.env[name]
+            f = f.parent
+        raise CodegenError(f"undefined name {name!r}")
+
+    def graph(self) -> GraphRef:
+        for v in self.env.values():
+            if isinstance(v, GraphRef):
+                return v
+        if self.parent:
+            return self.parent.graph()
+        raise CodegenError("no graph in scope")
+
+    # -- prop helpers -------------------------------------------------------
+    def node_props(self) -> Dict[str, PropRef]:
+        out = {}
+        f: Optional[Frame] = self
+        while f is not None:
+            for k, v in f.env.items():
+                if isinstance(v, PropRef) and not v.is_edge and k not in out:
+                    out[k] = v
+            f = f.parent
+        return out
+
+    def props_arrays(self) -> Dict[str, jax.Array]:
+        return {k: v.box.value for k, v in self.node_props().items()
+                if v.box.value is not None}
+
+    def write_back(self, props: Dict[str, jax.Array]):
+        refs = self.node_props()
+        for k, arr in props.items():
+            if k in refs:
+                refs[k].box.value = arr
+
+
+def _const_value(expr: A.Expr, elem: str):
+    if isinstance(expr, A.Inf):
+        return INF_W if elem in ("int",) else (jnp.inf if elem == "float"
+                                               else INF_W)
+    if isinstance(expr, A.Bool):
+        return expr.value
+    if isinstance(expr, A.Num):
+        return expr.value
+    if isinstance(expr, A.Unary) and expr.op == "-" \
+            and isinstance(expr.operand, A.Num):
+        return -expr.operand.value
+    return None
+
+
+def _is_int(x) -> bool:
+    if isinstance(x, bool):
+        return False
+    if isinstance(x, int):
+        return True
+    if hasattr(x, "dtype"):
+        return jnp.issubdtype(x.dtype, jnp.integer)
+    return False
+
+
+def _binop(op: str, a, b):
+    if op == "+":
+        return a + b
+    if op == "-":
+        return a - b
+    if op == "*":
+        return a * b
+    if op == "/":
+        if _is_int(a) and _is_int(b):
+            return a // b
+        return a / b
+    if op == "%":
+        return a % b
+    if op == "<":
+        return a < b
+    if op == ">":
+        return a > b
+    if op == "<=":
+        return a <= b
+    if op == ">=":
+        return a >= b
+    if op == "==":
+        return a == b
+    if op == "!=":
+        return a != b
+    if op == "&&":
+        return a & b if hasattr(a, "dtype") or hasattr(b, "dtype") \
+            else (a and b)
+    if op == "||":
+        return a | b if hasattr(a, "dtype") or hasattr(b, "dtype") \
+            else (a or b)
+    raise CodegenError(f"bad operator {op}")
+
+
+# ===========================================================================
+# Program
+# ===========================================================================
+
+class Program:
+    """A compiled DSL program; run any function on any engine."""
+
+    def __init__(self, source: str):
+        self.source = source
+        self.ast = parse(source)
+        self.infos = analyze(self.ast)
+
+    # -- public API ----------------------------------------------------------
+    def run(self, func_name: str, engine: Engine, csr: CSR,
+            args: Optional[Dict[str, Any]] = None,
+            diff_capacity: int = 64) -> RunResult:
+        """Execute ``func_name`` with graph ``csr`` on ``engine``.
+
+        ``args`` supplies scalars (by param name) and the UpdateStream for
+        ``updates<g>`` params.  propNode/propEdge params are allocated by
+        the program (attachNodeProperty) and returned in the result.
+        """
+        args = dict(args or {})
+        func = self.ast.func(func_name)
+        g = engine.prepare(csr, diff_capacity=diff_capacity)
+        frame = Frame(engine)
+        gbox = Box(g)
+        for p in func.params:
+            t = p.type
+            if t.name == "Graph":
+                frame.env[p.name] = GraphRef(gbox)
+            elif t.is_prop:
+                frame.env[p.name] = PropRef(
+                    p.name, _elem(t), Box(None), is_edge=t.name == "propEdge")
+            elif t.name == "updates":
+                frame.env[p.name] = UpdatesRef(args.pop(p.name))
+            else:
+                frame.env[p.name] = args.pop(p.name)
+        if args:
+            raise CodegenError(f"unused args: {sorted(args)}")
+        ex = Executor(self, engine)
+        ex.exec_block(func.body, frame)
+        props = {k: np.asarray(v.box.value)[: engine.n_real]
+                 for k, v in frame.node_props().items()
+                 if v.box.value is not None}
+        return RunResult(g=gbox.value, props=props, value=frame.ret)
+
+
+def _elem(t: A.Type) -> str:
+    return {"int": "int", "long": "int", "float": "float",
+            "double": "float", "bool": "bool"}[t.arg]
+
+
+def compile_source(source_or_path: str) -> Program:
+    """Compile DSL text (or a path to a .sp file) into a Program."""
+    p = pathlib.Path(str(source_or_path))
+    if str(source_or_path).endswith(".sp") and p.exists():
+        source_or_path = p.read_text()
+    return Program(str(source_or_path))
+
+
+# ===========================================================================
+# Executor: host-level statement interpretation
+# ===========================================================================
+
+class Executor:
+    def __init__(self, prog: Program, engine: Engine):
+        self.prog = prog
+        self.engine = engine
+
+    # -- blocks / statements --------------------------------------------------
+    def exec_block(self, block: A.Block, frame: Frame):
+        for st in block.stmts:
+            if frame.ret is not None:
+                return
+            self.exec_stmt(st, frame)
+
+    def exec_stmt(self, st: A.Stmt, frame: Frame):
+        if isinstance(st, A.Decl):
+            self.exec_decl(st, frame)
+        elif isinstance(st, A.Assign):
+            self.exec_assign(st, frame)
+        elif isinstance(st, A.CallStmt):
+            self.eval_host(st.call, frame)
+        elif isinstance(st, A.Return):
+            frame.ret = self.eval_host(st.value, frame)
+        elif isinstance(st, A.If):
+            cond = self.eval_host(st.cond, frame)
+            if bool(cond):
+                self.exec_block(st.then, frame)
+            elif st.orelse is not None:
+                self.exec_block(st.orelse, frame)
+        elif isinstance(st, A.ForAll):
+            run_forall(self, st, frame)
+        elif isinstance(st, A.FixedPoint):
+            run_loop(self, st.body.stmts, frame, kind="fixedPoint",
+                     flag=st.flag, cond=st.cond)
+        elif isinstance(st, A.DoWhile):
+            run_loop(self, st.body.stmts, frame, kind="do", cond=st.cond)
+        elif isinstance(st, A.While):
+            run_loop(self, st.body.stmts, frame, kind="while", cond=st.cond)
+        elif isinstance(st, A.BatchStmt):
+            self.exec_batch(st, frame)
+        elif isinstance(st, A.OnUpdate):
+            run_onupdate(self, st, frame)
+        else:
+            raise CodegenError(f"line {st.line}: unsupported statement "
+                               f"{type(st).__name__}")
+
+    def exec_decl(self, st: A.Decl, frame: Frame):
+        t = st.type
+        if t.is_prop:
+            frame.env[st.name] = PropRef(st.name, _elem(t), Box(None),
+                                         is_edge=t.name == "propEdge")
+        elif t.name == "updates":
+            v = self.eval_host(st.init, frame) if st.init else None
+            frame.env[st.name] = v
+        elif t.name == "node":
+            v = self.eval_host(st.init, frame) if st.init else 0
+            frame.env[st.name] = NodeIdx(v) if not isinstance(v, NodeIdx) \
+                else v
+        elif t.name == "edge":
+            frame.env[st.name] = self.eval_host(st.init, frame)
+        else:
+            v = self.eval_host(st.init, frame) if st.init is not None else 0
+            if t.name in ("float", "double"):
+                v = float(v) if not hasattr(v, "dtype") else v.astype(F32)
+            frame.env[st.name] = v
+
+    def exec_assign(self, st: A.Assign, frame: Frame):
+        if isinstance(st.target, A.Name):
+            name = st.target.ident
+            cur = None
+            try:
+                cur = frame.lookup(name)
+            except CodegenError:
+                pass
+            val = self.eval_host(st.value, frame)
+            if isinstance(cur, PropRef):
+                # whole-property copy: pageRank = pageRank_nxt
+                if isinstance(val, PropRef):
+                    val = val.box.value
+                cur.box.value = val
+                return
+            if st.op == "+=":
+                val = _binop("+", cur, val)
+            elif st.op == "-=":
+                val = _binop("-", cur, val)
+            _set_env(frame, name, val)
+            return
+        if isinstance(st.target, A.Attr):
+            # host-level scatter: src.modified = True (src: scalar node)
+            obj = self.eval_host(st.target.obj, frame)
+            pname = st.target.name
+            ref = frame.lookup(pname)
+            if not isinstance(ref, PropRef):
+                raise CodegenError(f"line {st.line}: {pname} not a property")
+            idx = obj.idx if isinstance(obj, NodeIdx) else obj
+            val = self.eval_host(st.value, frame)
+            if isinstance(val, NodeIdx):
+                val = val.idx
+            arr = ref.box.value
+            ref.box.value = arr.at[idx].set(jnp.asarray(val, arr.dtype))
+            return
+        raise CodegenError(f"line {st.line}: bad assignment")
+
+    def exec_batch(self, st: A.BatchStmt, frame: Frame):
+        ups = frame.lookup(st.updates)
+        if not isinstance(ups, UpdatesRef):
+            raise CodegenError(f"line {st.line}: {st.updates} is not "
+                               f"an updates<g> value")
+        bs = frame.lookup(st.batch_size)
+        for batch in ups.stream.batches(int(bs)):
+            inner = Frame(self.engine, parent=frame)
+            inner.current_batch = batch
+            self.exec_block(st.body, inner)
+            if inner.ret is not None:
+                frame.ret = inner.ret
+                return
+
+    # -- host expression evaluation -----------------------------------------
+    def eval_host(self, e: A.Expr, frame: Frame):
+        if isinstance(e, A.Num):
+            return e.value
+        if isinstance(e, A.Bool):
+            return e.value
+        if isinstance(e, A.Inf):
+            return INF_W
+        if isinstance(e, A.Name):
+            return frame.lookup(e.ident)
+        if isinstance(e, A.Unary):
+            v = self.eval_host(e.operand, frame)
+            return (not v) if e.op == "!" else (-v)
+        if isinstance(e, A.Binary):
+            a = self.eval_host(e.left, frame)
+            b = self.eval_host(e.right, frame)
+            if isinstance(a, NodeIdx):
+                a = a.idx
+            if isinstance(b, NodeIdx):
+                b = b.idx
+            return _binop(e.op, a, b)
+        if isinstance(e, A.MinMax):
+            vals = [self.eval_host(a, frame) for a in e.args]
+            return min(vals) if e.op == "Min" else max(vals)
+        if isinstance(e, A.Attr):
+            obj = self.eval_host(e.obj, frame)
+            if isinstance(obj, NodeIdx):
+                ref = frame.lookup(e.name)
+                if isinstance(ref, PropRef):
+                    return ref.box.value[obj.idx]
+            raise CodegenError(f"line {e.line}: bad attribute {e.name}")
+        if isinstance(e, A.Call):
+            return self.eval_call(e, frame)
+        raise CodegenError(f"line {e.line}: cannot evaluate "
+                           f"{type(e).__name__}")
+
+    def eval_call(self, e: A.Call, frame: Frame):
+        eng = self.engine
+        # method calls g.X(...) / updates.currentBatch(...)
+        if isinstance(e.func, A.Attr):
+            base = self.eval_host(e.func.obj, frame)
+            m = e.func.name
+            if isinstance(base, GraphRef):
+                return self.graph_method(base, m, e, frame)
+            if isinstance(base, UpdatesRef) and m == "currentBatch":
+                sel = "both"
+                if e.args:
+                    sel = "del" if self.eval_host(e.args[0], frame) == 0 \
+                        else "add"
+                return UpdatesRef(base.stream, selector=sel)
+            raise CodegenError(f"line {e.line}: unknown method {m}")
+        # free functions
+        assert isinstance(e.func, A.Name)
+        fname = e.func.ident
+        if fname == "abs":
+            return jnp.abs(self.eval_host(e.args[0], frame))
+        if fname in self.prog.infos:
+            return self.call_function(fname, e.args, frame)
+        raise CodegenError(f"line {e.line}: unknown function {fname}")
+
+    def graph_method(self, gref: GraphRef, m: str, e: A.Call, frame: Frame):
+        eng = self.engine
+        if m == "num_nodes":
+            return eng.n_real
+        if m == "count_outNbrs":
+            x = self.eval_host(e.args[0], frame)
+            idx = x.idx if isinstance(x, NodeIdx) else x
+            return eng.out_degrees(gref.box.value)[idx]
+        if m in ("attachNodeProperty", "attachEdgeProperty"):
+            for kw in e.args:
+                if not isinstance(kw, A.Kwarg):
+                    raise CodegenError(f"line {e.line}: attach* takes "
+                                       f"name=value arguments")
+                ref = frame.lookup(kw.name)
+                val = self.eval_host(kw.value, frame)
+                if isinstance(val, NodeIdx):
+                    val = val.idx
+                if ref.is_edge:
+                    if val not in (False, 0):
+                        raise CodegenError(f"line {e.line}: edge props "
+                                           f"initialize to False")
+                    # empty query → an all-False lane array in whatever
+                    # lane layout this engine uses (sharded for dist)
+                    ref.box.value = eng.batch_edge_flags(
+                        gref.box.value, jnp.zeros((1,), INT),
+                        jnp.zeros((1,), INT), jnp.zeros((1,), BOOL))
+                else:
+                    ref.box.value = eng.full(val, ref.dtype)
+            return None
+        if m == "updateCSRDel":
+            gref.box.value = eng.update_del(gref.box.value,
+                                            self._cur_batch(frame, e))
+            return None
+        if m == "updateCSRAdd":
+            gref.box.value = eng.update_add(gref.box.value,
+                                            self._cur_batch(frame, e))
+            return None
+        if m == "propagateNodeFlags":
+            flag = e.args[0]
+            assert isinstance(flag, A.Name)
+            ref = frame.lookup(flag.ident)
+            props = frame.props_arrays()
+            props = eng.propagate_flags(gref.box.value, props, flag.ident)
+            frame.write_back(props)
+            return None
+        if m == "get_edge":
+            a = self.eval_host(e.args[0], frame)
+            b = self.eval_host(e.args[1], frame)
+            return EdgeRef(a=a, b=b)
+        raise CodegenError(f"line {e.line}: unsupported graph method {m}")
+
+    def _cur_batch(self, frame: Frame, e) -> UpdateBatch:
+        b = frame.current_batch
+        if b is None:
+            raise CodegenError(f"line {e.line}: updateCSR* outside Batch")
+        return b
+
+    # -- user function calls ---------------------------------------------------
+    def call_function(self, fname: str, arg_exprs: List[A.Expr],
+                      frame: Frame):
+        func = self.prog.ast.func(fname)
+        if len(arg_exprs) != len(func.params):
+            raise CodegenError(f"call {fname}: arity mismatch")
+        callee = Frame(self.engine)
+        callee.current_batch = frame.current_batch
+        for p, ae in zip(func.params, arg_exprs):
+            val = self.eval_host(ae, frame)
+            if p.type.is_prop:
+                if not isinstance(val, PropRef):
+                    raise CodegenError(
+                        f"call {fname}: param {p.name} expects a property")
+                # rebind under the callee's name, sharing the Box
+                callee.env[p.name] = PropRef(p.name, val.elem, val.box,
+                                             val.is_edge)
+            elif p.type.name == "Graph":
+                callee.env[p.name] = val
+            elif p.type.name == "updates":
+                callee.env[p.name] = val
+            elif p.type.name == "node":
+                callee.env[p.name] = val if isinstance(val, NodeIdx) \
+                    else NodeIdx(val)
+            else:
+                callee.env[p.name] = val
+        self.exec_block(func.body, callee)
+        return callee.ret
+
+
+def _set_env(frame: Frame, name: str, val):
+    f: Optional[Frame] = frame
+    while f is not None:
+        if name in f.env:
+            f.env[name] = val
+            return
+        f = f.parent
+    frame.env[name] = val
+
+
+# the sweep/loop/wedge/onupdate lowerings live in a sibling module to keep
+# file sizes reviewable; import at the bottom to avoid cycles.
+from repro.core.dsl.lowering import (          # noqa: E402
+    run_forall, run_loop, run_onupdate)

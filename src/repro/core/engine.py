@@ -1,0 +1,341 @@
+"""Execution engines: one algorithm spec → three backends.
+
+This is the paper's code-generator layer.  The table in DESIGN.md §2 maps
+StarPlat's OpenMP / MPI / CUDA generators to:
+
+  * :class:`JnpEngine`   — single-device XLA (OpenMP analogue),
+  * ``DistEngine``       — shard_map + collectives (MPI analogue,
+                           see core/dist.py),
+  * ``PallasEngine``     — hand-tiled TPU kernels for the hot loops
+                           (CUDA analogue, see core/pallas_engine.py).
+
+All three consume the same :class:`repro.core.ir.EdgeSweep` programs; the
+algorithms in ``repro.algos`` never mention a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import EdgeSweep, Reduce
+from repro.graph.csr import CSR, INT, INF_W
+from repro.graph import diffcsr
+from repro.graph.diffcsr import DynGraph, BOOL
+from repro.graph.updates import UpdateBatch
+
+Props = Dict[str, jax.Array]
+
+
+class Collectives:
+    """Global-reduction helpers handed to fixed-point conditions.
+
+    On the single-device backend these are plain jnp reductions; the
+    distributed backend overrides them with psum/pmax over the mesh so the
+    *same algorithm text* stays correct — the paper's 'same DSL, different
+    synchronization per backend' point, in miniature.
+    """
+
+    def any(self, x):
+        return jnp.any(x)
+
+    def sum(self, x):
+        return jnp.sum(x)
+
+    def max(self, x):
+        return jnp.max(x)
+
+
+def edge_lane_flags(g: DynGraph, qs, qd, mask=None) -> jax.Array:
+    """Boolean flags over the (E+D,) edge lanes for a batch of edges —
+    the propEdge<bool> ``modified`` marking used by OnAdd/OnDelete."""
+    qs = jnp.asarray(qs, INT)
+    qd = jnp.asarray(qd, INT)
+    if mask is None:
+        mask = jnp.ones(qs.shape, BOOL)
+    E, D = g.main_capacity, g.diff_capacity
+    p1, f1 = diffcsr._locate_main(g, qs, qd)
+    p2, f2 = diffcsr._locate_diff(g, qs, qd)
+    flags = jnp.zeros((E + D,), BOOL)
+    flags = flags.at[jnp.where(f1 & mask, p1, E + D)].set(True, mode="drop")
+    flags = flags.at[jnp.where(f2 & mask & ~f1, E + p2, E + D)].set(
+        True, mode="drop")
+    return flags
+
+
+class WedgeCtx:
+    """Per-iteration context handed to wedge pair functions (TC)."""
+
+    def __init__(self, g: DynGraph, lane_flags: Dict[str, jax.Array],
+                 nbr_lane: jax.Array, is_edge_fn, edge_flag_fn):
+        self.g = g
+        self._lane_flags = lane_flags
+        self._nbr_lane = nbr_lane
+        self.is_edge = is_edge_fn          # (qs, qd) -> bool lanes
+        self.edge_flag = edge_flag_fn      # (name, qs, qd) -> bool lanes
+
+    def nbr_flag(self, name: str) -> jax.Array:
+        fl = self._lane_flags[name]
+        return fl[jnp.clip(self._nbr_lane, 0, fl.shape[0] - 1)]
+
+    def lane_flag(self, name: str) -> jax.Array:
+        return self._lane_flags[name]
+
+
+class Engine:
+    """Backend-neutral interface (the 'generated program' surface)."""
+
+    name = "base"
+
+    # -- construction ------------------------------------------------------
+    def prepare(self, csr: CSR, diff_capacity: int) -> Any:
+        raise NotImplementedError
+
+    def merge(self, handle) -> Any:
+        raise NotImplementedError
+
+    @property
+    def n_pad(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_real(self) -> int:
+        return self._n
+
+    def out_degrees(self, handle) -> jax.Array:
+        raise NotImplementedError
+
+    def full(self, value, dtype) -> jax.Array:
+        """Allocate a vertex property (paper: attachNodeProperty)."""
+        return jnp.full((self.n_pad,), value, dtype=dtype)
+
+    def read_props(self, props: Props) -> Dict[str, np.ndarray]:
+        return {k: np.asarray(v)[: self._n] for k, v in props.items()}
+
+    # -- aggregate ops -----------------------------------------------------
+    def sweep(self, handle, sw: EdgeSweep, props: Props) -> Props:
+        raise NotImplementedError
+
+    def fixed_point(self, handle, sw: EdgeSweep, props: Props,
+                    cond_fn: Callable, max_iter: int) -> Props:
+        raise NotImplementedError
+
+    def vertex_map(self, handle, fn: Callable, props: Props) -> Props:
+        raise NotImplementedError
+
+    def count_wedges(self, handle, pair_fn: Callable,
+                     lane_flags: Dict[str, jax.Array], out_example) -> Any:
+        raise NotImplementedError
+
+    # -- dynamic updates ---------------------------------------------------
+    def update_del(self, handle, batch: UpdateBatch):
+        raise NotImplementedError
+
+    def update_add(self, handle, batch: UpdateBatch):
+        raise NotImplementedError
+
+    def batch_edge_flags(self, handle, qs, qd, mask) -> jax.Array:
+        raise NotImplementedError
+
+    # -- library routines shared by all backends ---------------------------
+    def propagate_flags(self, handle, props: Props, flag: str,
+                        max_iter: int = 1_000_000) -> Props:
+        """paper: g.propagateNodeFlags — BFS-spread a boolean property to
+        everything reachable from the flagged set."""
+        sw = EdgeSweep(
+            edge_fn=lambda s, d, w: {flag: (s[flag], s[flag])},
+            reduces={flag: Reduce("or")},
+            post_fn=lambda p, red, hit: {
+                **p,
+                flag: p[flag] | red[flag],
+                "_changed": red[flag] & ~p[flag],
+            },
+        )
+        props = dict(props)
+        props["_changed"] = props[flag]
+        props = self.fixed_point(
+            handle, sw, props,
+            cond_fn=lambda p, it, col: col.any(p["_changed"]),
+            max_iter=max_iter)
+        props.pop("_changed")
+        return props
+
+
+# ===========================================================================
+# JnpEngine — single-device XLA (the OpenMP analogue)
+# ===========================================================================
+
+class JnpEngine(Engine):
+    name = "jnp"
+
+    def __init__(self):
+        self._n = None
+
+    # -- construction ------------------------------------------------------
+    def prepare(self, csr: CSR, diff_capacity: int) -> DynGraph:
+        self._n = csr.n
+        return diffcsr.from_csr(csr, diff_capacity)
+
+    def merge(self, g: DynGraph) -> DynGraph:
+        return diffcsr.merge(g)
+
+    @property
+    def n_pad(self) -> int:
+        return self._n
+
+    def out_degrees(self, g: DynGraph) -> jax.Array:
+        return g.out_degrees()
+
+    # -- core sweep --------------------------------------------------------
+    def _run_sweep(self, g: DynGraph, sw: EdgeSweep, props: Props) -> Props:
+        esrc, edst, ew, ealive = g.edge_arrays()
+        n = self.n_pad
+        sview = {k: v for k, v in props.items()}
+        s = _View(sview, esrc)
+        d = _View(sview, edst)
+        out = sw.edge_fn(s, d, ew)
+        reduced, hit = {}, {}
+        # value reductions first, arg-reductions second (two-pass argmin).
+        for target, red in sw.reduces.items():
+            if red.kind == "argmin":
+                continue
+            val, elig = out[target]
+            elig = elig & ealive
+            ident = red.identity(val.dtype)
+            v = jnp.where(elig, val, ident)
+            reduced[target] = red.segment(v, edst, n)
+            hit[target] = jax.ops.segment_max(
+                elig.astype(INT), edst, num_segments=n) > 0
+        for target, red in sw.reduces.items():
+            if red.kind != "argmin":
+                continue
+            of = red.of
+            val, elig = out[of]
+            elig = elig & ealive
+            achieved = elig & (val == reduced[of][edst])
+            v = jnp.where(achieved, esrc, jnp.asarray(n, INT))
+            reduced[target] = jax.ops.segment_min(v, edst, num_segments=n)
+            hit[target] = hit[of]
+        return sw.post_fn(props, reduced, hit)
+
+    def sweep(self, g: DynGraph, sw: EdgeSweep, props: Props) -> Props:
+        return self._run_sweep(g, sw, props)
+
+    def fixed_point(self, g: DynGraph, sw: EdgeSweep, props: Props,
+                    cond_fn: Callable, max_iter: int) -> Props:
+        col = Collectives()
+
+        def cond(state):
+            it, p = state
+            return (it < max_iter) & cond_fn(p, it, col)
+
+        def body(state):
+            it, p = state
+            return it + 1, self._run_sweep(g, sw, p)
+
+        _, props = jax.lax.while_loop(cond, body, (jnp.zeros((), INT), props))
+        return props
+
+    def vertex_map(self, g: DynGraph, fn: Callable, props: Props) -> Props:
+        return fn(props)
+
+    # -- wedges (triangle counting) ----------------------------------------
+    def count_wedges(self, g: DynGraph, pair_fn: Callable,
+                     lane_flags: Dict[str, jax.Array], out_example):
+        esrc, edst, ew, ealive = g.edge_arrays()
+        E, D = g.main_capacity, g.diff_capacity
+        deg_main = np.asarray(g.offsets[1:] - g.offsets[:-1])
+        deg_diff = np.asarray(g.d_offsets[1:] - g.d_offsets[:-1])
+        max_main = int(deg_main.max()) if deg_main.size else 0
+        max_diff = int(deg_diff.max()) if deg_diff.size else 0
+
+        def is_edge_fn(qs, qd):
+            return diffcsr.is_edge(g, qs, qd)
+
+        def edge_flag_fn(name, qs, qd):
+            fl = lane_flags[name]
+            p1, f1 = diffcsr._locate_main(g, qs, qd)
+            p2, f2 = diffcsr._locate_diff(g, qs, qd)
+            r = jnp.zeros(qs.shape, BOOL)
+            r = jnp.where(f1 & g.alive[p1], fl[jnp.clip(p1, 0, E + D - 1)], r)
+            r = jnp.where(f2 & g.d_alive[p2] & ~f1,
+                          fl[jnp.clip(E + p2, 0, E + D - 1)], r)
+            return r
+
+        zero = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((), jnp.asarray(x).dtype), out_example)
+
+        def accumulate(total, j, region):
+            if region == "main":
+                pos = g.offsets[esrc] + j
+                ok = (pos < g.offsets[esrc + 1])
+                safe = jnp.clip(pos, 0, max(E - 1, 0))
+                z = g.dst[safe]
+                z_ok = ok & g.alive[safe]
+                nbr_lane = safe
+            else:
+                pos = g.d_offsets[esrc] + j
+                ok = (pos < g.d_offsets[esrc + 1])
+                safe = jnp.clip(pos, 0, max(D - 1, 0))
+                z = g.d_dst[safe]
+                z_ok = ok & g.d_alive[safe]
+                nbr_lane = E + safe
+            ctx = WedgeCtx(g, lane_flags, nbr_lane, is_edge_fn, edge_flag_fn)
+            contrib = pair_fn(esrc, edst, z, z_ok & ealive, ctx)
+            return jax.tree_util.tree_map(
+                lambda t, c: t + jnp.sum(c), total, contrib)
+
+        def scan_region(total, count, region):
+            if count == 0:
+                return total
+            def body(j, tot):
+                return accumulate(tot, j, region)
+            return jax.lax.fori_loop(0, count, body, total)
+
+        total = scan_region(zero, max_main, "main")
+        if D:
+            total = scan_region(total, max_diff, "diff")
+        return total
+
+    # -- updates (jitted: the scatter programs re-trace cheaply and the
+    # compiled executables cache on the static (E, D, B) shapes) ----------
+    _upd_del = staticmethod(jax.jit(diffcsr.update_csr_del))
+    _upd_add = staticmethod(jax.jit(diffcsr.update_csr_add))
+
+    def update_del(self, g: DynGraph, batch: UpdateBatch) -> DynGraph:
+        return JnpEngine._upd_del(g, batch.del_src, batch.del_dst,
+                                  batch.del_mask)
+
+    def update_add(self, g: DynGraph, batch: UpdateBatch) -> DynGraph:
+        return JnpEngine._upd_add(g, batch.add_src, batch.add_dst,
+                                  batch.add_w, batch.add_mask)
+
+    def batch_edge_flags(self, g: DynGraph, qs, qd, mask) -> jax.Array:
+        return edge_lane_flags(g, qs, qd, mask)
+
+    def src_flags_from_dst(self, g: DynGraph, dst_mask) -> jax.Array:
+        """Mark sources having an alive out-edge into the flagged dst set
+        (the push-repair boundary; engines without it fall back to a
+        dense seed)."""
+        esrc, edst, ew, ealive = g.edge_arrays()
+        n = self.n_pad
+        hit = ealive & (edst < n) & dst_mask[jnp.clip(edst, 0, n - 1)]
+        return jnp.zeros((n,), BOOL).at[
+            jnp.where(hit, esrc, n)].set(True, mode="drop")
+
+
+class _View:
+    """Gathered endpoint view (no read-logging on the hot path)."""
+
+    __slots__ = ("_p", "_i")
+
+    def __init__(self, props, idx):
+        self._p = props
+        self._i = idx
+
+    def __getitem__(self, k):
+        return self._p[k][self._i]

@@ -1,0 +1,169 @@
+"""The StarPlat-Dynamic intermediate representation, staged for JAX.
+
+The paper parses DSL text into an AST, runs read/write-set and race
+analyses, then hands the annotated tree to one of three code generators.
+Our embedded-DSL equivalent:
+
+  * algorithms are written against a handful of *aggregate ops*
+    (:class:`EdgeSweep`, wedge enumeration, vertex maps, fixed points) —
+    the moral equivalents of ``forall``/``fixedPoint``/``Min``;
+  * every write inside a ``forall`` is declared as a :class:`Reduce`
+    (min/sum/max/or).  This replaces the paper's race analysis: instead
+    of *detecting* races and inserting atomics, the IR makes the
+    combiner explicit, and each backend lowers it to its native
+    synchronization (segment reduction / cross-shard pmin / kernel);
+  * :class:`ReadSetTracer` recovers the paper's read-set analysis: it
+    records which vertex properties an ``edge_fn`` actually touches, so
+    the distributed backend gathers (— opens "RMA windows" for —) only
+    those.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import INF_W
+
+# ---------------------------------------------------------------------------
+# Reductions (the paper's Min / += / |= constructs)
+# ---------------------------------------------------------------------------
+
+_IDENTITIES = {
+    "min": lambda dt: jnp.asarray(INF_W, dt) if jnp.issubdtype(dt, jnp.integer)
+    else jnp.asarray(jnp.inf, dt),
+    "max": lambda dt: jnp.asarray(-INF_W, dt) if jnp.issubdtype(dt, jnp.integer)
+    else jnp.asarray(-jnp.inf, dt),
+    "sum": lambda dt: jnp.zeros((), dt),
+    "or": lambda dt: jnp.zeros((), jnp.bool_),
+}
+
+_SEGMENT = {
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+    "sum": jax.ops.segment_sum,
+    # NB: segment_max fills empty segments with dtype-min, so 'or' must
+    # compare > 0 rather than astype(bool).
+    "or": lambda v, s, num_segments: jax.ops.segment_max(
+        v.astype(jnp.int32), s, num_segments=num_segments) > 0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Reduce:
+    """Declared combiner for one property written inside a forall-edges.
+
+    kind='argmin' picks, per destination vertex, the smallest source id
+    among edges achieving the min of the ``of`` target — how the paper's
+    ``nbr.parent = v`` rides along its ``Min`` multi-assignment, made
+    deterministic.
+    """
+
+    kind: str  # 'min' | 'sum' | 'max' | 'or' | 'argmin'
+    of: str | None = None
+
+    def identity(self, dtype):
+        return _IDENTITIES[self.kind](dtype)
+
+    def segment(self, values, segids, num_segments):
+        return _SEGMENT[self.kind](values, segids, num_segments=num_segments)
+
+    def combine(self, a, b):
+        if self.kind == "min":
+            return jnp.minimum(a, b)
+        if self.kind == "max":
+            return jnp.maximum(a, b)
+        if self.kind == "sum":
+            return a + b
+        if self.kind == "or":
+            return a | b
+        raise ValueError(self.kind)
+
+
+# ---------------------------------------------------------------------------
+# Property views + read-set analysis
+# ---------------------------------------------------------------------------
+
+class PropView(Mapping):
+    """Read-only view of vertex properties gathered at one edge endpoint.
+
+    Records every key it serves — the embedded-DSL version of the paper's
+    read-set analysis on the AST (used there to place cudaMemcpys and RMA
+    windows; used here to pick which properties the distributed backend
+    all-gathers).
+    """
+
+    def __init__(self, props: Dict[str, jax.Array], idx: jax.Array,
+                 read_log: set | None = None):
+        self._props = props
+        self._idx = idx
+        self._log = read_log
+
+    def __getitem__(self, k: str) -> jax.Array:
+        if self._log is not None:
+            self._log.add(k)
+        return self._props[k][self._idx]
+
+    def __iter__(self):
+        return iter(self._props)
+
+    def __len__(self):
+        return len(self._props)
+
+
+def trace_read_set(edge_fn: Callable, props: Dict[str, jax.Array]) -> set:
+    """Abstractly run edge_fn on 1-lane shapes to recover its read set."""
+    log: set = set()
+    one = {k: v[:1] for k, v in props.items()}
+    idx = jnp.zeros((1,), jnp.int32)
+    s = PropView(one, idx, log)
+    d = PropView(one, idx, log)
+    w = jnp.zeros((1,), jnp.int32)
+    try:
+        jax.eval_shape(lambda: edge_fn(s, d, w))
+    except Exception:
+        # Tracing only for the read log; a failure here falls back to
+        # gathering everything (always sound).
+        return set(props)
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Aggregate ops
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSweep:
+    """One ``forall (e in g.edges)`` with declared reductions.
+
+    edge_fn(src_view, dst_view, w) -> {target: (value, eligible_mask)}
+      target is a vertex-property name; value/mask are per-edge-lane.
+      Reduction is always *at the destination vertex* (push along the
+      edge); pull formulations pass the transposed graph.
+    reduces: {target: Reduce}
+    post_fn(props, reduced, hit) -> new props
+      Pure element-wise over (n,)-arrays: 'reduced' holds the combined
+      values (identity where no eligible edge), 'hit' the per-vertex
+      any-eligible-edge mask.  This is where the paper's
+      ``<nbr.dist, nbr.modified_nxt, nbr.parent> = <Min(...), True, v>``
+      multi-assignment lands.
+    """
+
+    edge_fn: Callable
+    reduces: Dict[str, Reduce]
+    post_fn: Callable
+    # Optional declaration that the sweep is of gather-combine form
+    #   cand(e=(u,v)) = vec[u] (+ w(e))
+    # with eligibility folded into vec via the reduction identity.  The
+    # Pallas backend lowers such sweeps onto the ELL kernels; others fall
+    # back to segment reductions.  {target: (vec_fn(props)->(n,), use_w)}.
+    gather_form: Dict[str, Tuple[Callable, bool]] | None = None
+    # Optional name of the boolean SOURCE-side property that gates which
+    # vertices push this iteration — lets the FrontierEngine run the
+    # sweep work-efficiently over O(|frontier|) rows (Ligra-style).
+    frontier: str | None = None
+
+    def read_set(self, props: Dict[str, jax.Array]) -> set:
+        return trace_read_set(self.edge_fn, props)

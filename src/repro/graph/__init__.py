@@ -1,0 +1,3 @@
+from repro.graph.csr import CSR, build_csr, rmat_graph, uniform_graph, grid_graph, INF_W
+from repro.graph.diffcsr import DynGraph, from_csr, update_csr_add, update_csr_del, merge, is_edge, edge_weight
+from repro.graph.updates import UpdateStream, UpdateBatch, random_updates

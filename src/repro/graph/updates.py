@@ -1,0 +1,116 @@
+"""Update batches: the ``updates<g>`` / ``Batch(allUpdates:batchSize)`` DSL
+objects from the paper, as static-shape arrays.
+
+An :class:`UpdateStream` is the full Δ (the paper generates these as a
+percentage of |E|: half deletions sampled from existing edges, half
+additions of fresh random edges, matching the paper's "percentage of
+updates ... includes both incremental and decremental ones").
+
+``batches()`` sweeps through it ``batch_size`` at a time — each
+:class:`UpdateBatch` carries padded add/del arrays with validity masks so
+every batch has the same static shape (XLA-friendly; the last partial
+batch is padded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSR, INT
+from repro.graph.diffcsr import BOOL
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    add_src: jax.Array   # (B,) int32
+    add_dst: jax.Array
+    add_w: jax.Array
+    add_mask: jax.Array  # (B,) bool
+    del_src: jax.Array   # (B,) int32
+    del_dst: jax.Array
+    del_mask: jax.Array
+
+    @property
+    def size(self) -> int:
+        return int(self.add_src.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateStream:
+    """Host-side container for the whole Δ; slices into UpdateBatches."""
+
+    adds: np.ndarray      # (A, 3) src, dst, w
+    dels: np.ndarray      # (Dl, 2) src, dst
+
+    @property
+    def num_adds(self) -> int:
+        return int(self.adds.shape[0])
+
+    @property
+    def num_dels(self) -> int:
+        return int(self.dels.shape[0])
+
+    def num_batches(self, batch_size: int) -> int:
+        longest = max(self.num_adds, self.num_dels, 1)
+        return -(-longest // batch_size)
+
+    def batch(self, i: int, batch_size: int) -> UpdateBatch:
+        def pad_slice(arr: np.ndarray, width: int):
+            lo = i * batch_size
+            chunk = arr[lo:lo + batch_size]
+            k = chunk.shape[0]
+            out = np.zeros((batch_size, width), dtype=np.int32)
+            out[:k] = chunk
+            mask = np.zeros((batch_size,), dtype=bool)
+            mask[:k] = True
+            return out, mask
+
+        a, am = pad_slice(self.adds, 3)
+        d, dm = pad_slice(self.dels, 2)
+        return UpdateBatch(
+            add_src=jnp.asarray(a[:, 0]), add_dst=jnp.asarray(a[:, 1]),
+            add_w=jnp.asarray(np.maximum(a[:, 2], 1)),
+            add_mask=jnp.asarray(am),
+            del_src=jnp.asarray(d[:, 0]), del_dst=jnp.asarray(d[:, 1]),
+            del_mask=jnp.asarray(dm),
+        )
+
+    def batches(self, batch_size: int) -> Iterator[UpdateBatch]:
+        for i in range(self.num_batches(batch_size)):
+            yield self.batch(i, batch_size)
+
+
+def random_updates(csr: CSR, percent: float, seed: int = 0,
+                   max_w: int = 100, add_frac: float = 0.5) -> UpdateStream:
+    """Sample Δ as the paper does: ``percent`` of |E| updates, split between
+    deletions of existing edges and additions of fresh edges."""
+    rng = np.random.default_rng(seed)
+    n = csr.n
+    e = csr.num_edges
+    total = max(int(e * percent / 100.0), 1)
+    n_add = int(total * add_frac)
+    n_del = total - n_add
+
+    src = np.asarray(csr.src)
+    dst = np.asarray(csr.dst)
+    del_idx = rng.choice(e, size=min(n_del, e), replace=False)
+    dels = np.stack([src[del_idx], dst[del_idx]], axis=1).astype(np.int32)
+
+    # Fresh edges: sample, then drop collisions with existing edges.
+    existing = set(zip(src.tolist(), dst.tolist()))
+    adds = []
+    while len(adds) < n_add:
+        cand = rng.integers(0, n, size=(2 * (n_add - len(adds)) + 8, 2))
+        for u, v in cand:
+            if (u, v) not in existing and u != v:
+                adds.append((int(u), int(v), int(rng.integers(1, max_w))))
+                existing.add((int(u), int(v)))
+                if len(adds) >= n_add:
+                    break
+    adds = np.asarray(adds, dtype=np.int32).reshape(-1, 3)
+    return UpdateStream(adds=adds, dels=dels)

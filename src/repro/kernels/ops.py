@@ -1,0 +1,46 @@
+"""jit'd wrappers turning the ELL kernels into vertex-level graph ops."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import INF_W, INT
+from repro.kernels.ell import Ell
+from repro.kernels import csr_relax as K
+
+
+def _combine_rows(row_vals, row2dst, n, kind, identity):
+    seg = {"min": jax.ops.segment_min, "sum": jax.ops.segment_sum,
+           "max": jax.ops.segment_max}[kind]
+    dense = seg(row_vals, row2dst, num_segments=n + 1)
+    return dense[:n]
+
+
+def vertex_min_plus(ell: Ell, vals_n1: jax.Array, *, interpret=True):
+    """out[v] = min over in-edges (u,v) of vals[u] + w(u,v); INF if none."""
+    rows = K.relax_rowmin(ell.ell_src, ell.ell_w, vals_n1,
+                          interpret=interpret)
+    return _combine_rows(rows, ell.row2dst, ell.n, "min",
+                         jnp.asarray(INF_W, vals_n1.dtype))
+
+
+def vertex_spmv(ell: Ell, vals_n1: jax.Array, *, interpret=True):
+    """out[v] = sum over in-edges (u,v) of vals[u]  (PageRank pull)."""
+    rows = K.spmv_rowsum(ell.ell_src, vals_n1, interpret=interpret)
+    return _combine_rows(rows, ell.row2dst, ell.n, "sum",
+                         jnp.zeros((), vals_n1.dtype))
+
+
+def vertex_argmin_src(ell: Ell, vals_n1: jax.Array, vertex_min: jax.Array,
+                      *, interpret=True):
+    """Smallest source achieving vertex_min[v] (deterministic parent)."""
+    n = ell.n
+    tgt_full = jnp.concatenate([vertex_min,
+                                jnp.full((1,), INF_W, vertex_min.dtype)])
+    row_tgt = tgt_full[jnp.minimum(ell.row2dst, n)]
+    rows = K.relax_rowargmin(ell.ell_src, ell.ell_w, vals_n1, row_tgt,
+                             n=n, interpret=interpret)
+    return _combine_rows(rows, ell.row2dst, ell.n, "min",
+                         jnp.asarray(n, INT))

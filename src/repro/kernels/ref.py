@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+
+import jax.numpy as jnp
+
+
+def relax_rowmin_ref(ell_src, ell_w, vals):
+    return jnp.min(vals[ell_src] + ell_w, axis=1)
+
+
+def spmv_rowsum_ref(ell_src, vals):
+    return jnp.sum(vals[ell_src], axis=1)
+
+
+def relax_rowargmin_ref(ell_src, ell_w, vals, row_targets, *, n):
+    cand = vals[ell_src] + ell_w
+    achieved = cand == row_targets[:, None]
+    return jnp.min(jnp.where(achieved, ell_src, n), axis=1)
+
+
+def flash_ref(q, k, v, *, causal=True, softcap=None):
+    """O(S²) oracle for the flash kernel. q,k,v: (BH, S, dh)."""
+    BH, S, dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q * dh ** -0.5, k).astype(jnp.float32)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

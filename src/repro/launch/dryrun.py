@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating a single parameter:
+  * proof the sharding config lowers and compiles on the production mesh
+    (16×16 single-pod AND 2×16×16 multi-pod),
+  * ``memory_analysis()`` — per-device bytes (does it fit HBM),
+  * ``cost_analysis()``   — HLO FLOPs / bytes for the roofline,
+  * collective-bytes by op kind, parsed from the compiled HLO.
+
+Results are appended to benchmarks/results/dryrun.json so interrupted
+sweeps resume where they stopped.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force]
+"""
+import argparse
+import functools
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import REGISTRY, SHAPES, cells
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun.json"
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s8|u8|s16|u16|"
+                       r"s32|u32|s64|u64|pred)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dt]
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op, by kind.
+
+    cost_analysis() has no collective term, so we parse the compiled HLO
+    (brief §ROOFLINE).  Result shape is used as the volume proxy: for
+    all-gather it's the post-gather size (what actually crosses ICI,
+    counted once), for reduce-scatter the reduced shard.
+    """
+    out = {k: 0 for k in _COLL}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        s = line.strip()
+        # result-defining lines look like: %x = TYPE[...] op-name(...)
+        for kind in _COLL:
+            if f" {kind}(" in s or f"= {kind}(" in s:
+                # take the shape(s) before the op name (the result tuple)
+                head = s.split(kind + "(")[0]
+                ms = list(_SHAPE_RE.finditer(head))
+                if ms:
+                    out[kind] += sum(shape_bytes(m) for m in ms)
+                    out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLL)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               tuning: str = "baseline"):
+    from repro.models.model import Model, input_specs
+    from repro.models.tuning import BASELINE, OPTIMIZED
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    model = Model(cfg=cfg, mesh=mesh,
+                  tuning=BASELINE if tuning == "baseline" else OPTIMIZED)
+    specs = input_specs(model, shape)
+    if shape.kind == "train":
+        fn = lambda params, opt_state, step, batch: model.train_step(
+            params, opt_state, step, batch)
+        args = (specs["params"], specs["opt_state"], specs["step"],
+                specs["batch"])
+    elif shape.kind == "prefill":
+        fn = lambda params, batch: model.prefill_step(params, batch)
+        args = (specs["params"], specs["batch"])
+    else:
+        long_mode = shape_name == "long_500k"
+        if "src" in specs:
+            fn = lambda params, cache, token, pos, src: model.serve_step(
+                params, cache, token, pos, src=src, long_mode=long_mode)
+            args = (specs["params"], specs["cache"], specs["token"],
+                    specs["pos"], specs["src"])
+        else:
+            fn = lambda params, cache, token, pos: model.serve_step(
+                params, cache, token, pos, long_mode=long_mode)
+            args = (specs["params"], specs["cache"], specs["token"],
+                    specs["pos"])
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def analyze(compiled, n_chips: int) -> dict:
+    from repro.launch.hlo_cost import cost_record
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "n_chips": n_chips,
+    }
+    # trip-count-aware per-device costs (cost_analysis counts while/scan
+    # bodies once and XLA's numbers exclude loop trip counts — see
+    # repro/launch/hlo_cost.py)
+    rec["hlo_cost"] = cost_record(hlo)
+    if ma is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            try:
+                rec[k] = int(getattr(ma, k))
+            except Exception:
+                pass
+    return rec
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res: dict):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(res, indent=1, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--tuning", default="baseline",
+                    choices=["baseline", "opt"],
+                    help="baseline = paper-faithful lowering; opt = the "
+                         "§Perf-optimized paths (tuning.py)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", False, 256))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", True, 512))
+
+    res = load_results()
+    todo = [(a, s) for (a, s) in cells()
+            if (args.arch in (None, a)) and (args.shape in (None, s))]
+    print(f"dry-run: {len(todo)} cells × {len(meshes)} meshes")
+    for mesh_name, multi, chips in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch, shape_name in todo:
+            key = f"{arch}|{shape_name}|{mesh_name}"
+            if args.tuning != "baseline":
+                key += f"|{args.tuning}"
+            if key in res and res[key].get("ok") and not args.force:
+                print(f"[skip] {key}")
+                continue
+            t0 = time.time()
+            try:
+                lowered, compiled = lower_cell(arch, shape_name, mesh, multi,
+                                               tuning=args.tuning)
+                rec = analyze(compiled, chips)
+                rec["ok"] = True
+                rec["compile_s"] = round(time.time() - t0, 1)
+                print(f"[ok]   {key}  flops={rec['flops']:.3e} "
+                      f"coll={rec['collectives']['total']:.3e}B "
+                      f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                      f"({rec['compile_s']}s)")
+                del lowered, compiled
+            except Exception as e:
+                rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "compile_s": round(time.time() - t0, 1)}
+                print(f"[FAIL] {key}: {rec['error'][:300]}")
+                traceback.print_exc(limit=3)
+            res[key] = rec
+            save_results(res)
+    bad = [k for k, v in res.items() if not v.get("ok")]
+    print(f"done: {sum(1 for v in res.values() if v.get('ok'))} ok, "
+          f"{len(bad)} failed")
+    for k in bad:
+        print("  FAILED:", k)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,373 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` has two blind spots that matter for a
+roofline on scanned-layer models:
+
+  1. while-loop bodies (lax.scan over layer units) are counted ONCE,
+     not × trip-count — a 94-layer model reports ~1 layer of FLOPs;
+  2. the reported numbers are for the per-device (post-SPMD) module.
+
+This module re-derives FLOPs / HBM bytes / collective bytes by parsing
+the optimized HLO, building the computation call graph, and weighting
+every computation by its execution multiplicity (while bodies get their
+trip count, extracted from the loop-condition constant).
+
+The numbers are per-device, which is what the roofline terms need.
+
+Cost model:
+  * FLOPs: 2·prod(result)·prod(contracting dims) per ``dot``; elementwise
+    flops are ignored (MXU-roofline convention).
+  * HBM bytes: Σ (operands + results) over top-level ops, skipping pure
+    data-movement/metadata ops (tuple plumbing, bitcasts, parameters).
+    Fusions count their boundary, matching XLA's bytes-accessed notion.
+  * collective bytes: result-shape bytes per collective op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+    "u4": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that don't touch HBM on their own (metadata / layout plumbing)
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "bitcast",
+             "constant", "after-all", "opt-barrier", "partition-id",
+             "replica-id", "iota"}
+
+# ops whose operand/result traffic is real HBM traffic on TPU.  The CPU
+# backend leaves elementwise chains unfused that the TPU compiler fuses
+# into their producing/consuming matmuls, so counting *every* op's
+# operands wildly over-states TPU HBM bytes; this set is the
+# fusion-realistic view (matmuls, cache updates, gathers/scatters,
+# reductions, copies that survive fusion, and collectives).
+_MEM_OPS = {"dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+            "gather", "scatter", "reduce", "reduce-window", "sort",
+            "select-and-scatter", "copy", "custom-call",
+            *COLLECTIVES, *{c + "-start" for c in COLLECTIVES}}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    shape: str                  # result shape text (may be a tuple)
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        hdr = _COMP_HDR.match(s)
+        if hdr and s.endswith("{"):
+            cur = Computation(name=hdr.group(1), ops={}, order=[])
+            comps[cur.name] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            continue
+        m = _OP_RE.match(s)
+        if m and cur is not None:
+            name, shape, opcode = m.group(1), m.group(2), m.group(3)
+            paren = s.find(opcode + "(") + len(opcode) + 1
+            depth, i = 1, paren
+            while i < len(s) and depth:
+                if s[i] == "(":
+                    depth += 1
+                elif s[i] == ")":
+                    depth -= 1
+                i += 1
+            args = s[paren:i - 1]
+            operands = _OPERAND_RE.findall(args)
+            cur.ops[name] = Op(name=name, opcode=opcode, shape=shape,
+                               line=s, operands=operands)
+            cur.order.append(name)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition ≈ the trip count
+    (canonical scan: compare(i, constant(R)) direction=LT, i from 0)."""
+    best = 1
+    for op in cond.ops.values():
+        for m in _CONST_RE.finditer(op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _shape_elems(op.shape)
+    cdims = _LHS_CONTRACT.search(op.line)
+    k = 1
+    if cdims and op.operands:
+        lhs = comp.ops.get(op.operands[0])
+        if lhs is not None:
+            m = _SHAPE_RE.search(lhs.shape)
+            if m:
+                dims = [int(d) for d in m.group(2).split(",") if d]
+                for ci in cdims.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # all-ops upper bound (CPU-fusion view)
+    bytes_fused: float = 0.0    # _MEM_OPS only (TPU-fusion-realistic view)
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: int = 0
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_count += int(other.coll_count * mult)
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+
+
+# fusion computations containing only elementwise ops melt into their
+# producers on TPU; ones containing these ops still touch HBM
+_CORE_MEM = {"dot", "convolution", "reduce", "reduce-window", "scatter",
+             "gather", "sort", "select-and-scatter", "dynamic-update-slice",
+             "dynamic-slice"}
+
+
+def _has_mem_op(name: str, comps: Dict[str, "Computation"],
+                memo: Dict[str, bool], depth: int = 0) -> bool:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    if comp is None or depth > 64:
+        return False
+    memo[name] = False
+    out = False
+    for op in comp.ops.values():
+        if op.opcode in _CORE_MEM:
+            out = True
+            break
+        m = _CALLS_RE.search(op.line)
+        if m and _has_mem_op(m.group(1), comps, memo, depth + 1):
+            out = True
+            break
+    memo[name] = out
+    return out
+
+
+def _local_cost(comp: Computation, comps: Dict[str, "Computation"],
+                in_fusion: bool, mem_memo: Dict[str, bool]) -> Cost:
+    """Cost of ops defined directly in this computation (no callees).
+
+    Inside fusion computations only FLOPs and collectives count — the
+    intermediate values live in registers/VMEM; the fusion's HBM traffic
+    is its boundary, counted at the caller's ``fusion`` op.
+    """
+    c = Cost()
+    for op in comp.ops.values():
+        if op.opcode in ("dot", "convolution"):
+            c.flops += _dot_flops(op, comp)
+        if op.opcode in COLLECTIVES or \
+                (op.opcode.endswith("-start") and
+                 op.opcode[:-6] in COLLECTIVES):
+            kind = op.opcode[:-6] if op.opcode.endswith("-start") \
+                else op.opcode
+            b = _shape_bytes(op.shape)
+            c.coll_bytes += b
+            c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + b
+            c.coll_count += 1
+        if in_fusion:
+            continue
+        if op.opcode == "fusion":
+            b = _op_hbm_bytes(op, comp)
+            c.bytes += b
+            m = _CALLS_RE.search(op.line)
+            if m and _has_mem_op(m.group(1), comps, mem_memo):
+                c.bytes_fused += b
+                c.bytes_by_op["fusion"] = \
+                    c.bytes_by_op.get("fusion", 0.0) + b
+            continue
+        if op.opcode not in _FREE_OPS and not op.opcode.endswith("-done"):
+            b = _op_hbm_bytes(op, comp)
+            c.bytes += b
+            if op.opcode in _MEM_OPS:
+                c.bytes_fused += b
+                c.bytes_by_op[op.opcode] = \
+                    c.bytes_by_op.get(op.opcode, 0.0) + b
+    return c
+
+
+def _operand_bytes(op: Op, comp: Computation, idx: int) -> int:
+    if idx >= len(op.operands):
+        return 0
+    src = comp.ops.get(op.operands[idx])
+    return _shape_bytes(src.shape) if src is not None else 0
+
+
+def _op_hbm_bytes(op: Op, comp: Computation) -> int:
+    """HBM traffic for one op.  Slice-family ops move only the slice —
+    counting the full operand would charge a scan step for reading the
+    entire stacked (R,…) weight tensor instead of its own layer."""
+    res = _shape_bytes(op.shape)
+    if op.opcode == "dynamic-slice":
+        return 2 * res                       # read slice + write result
+    if op.opcode == "dynamic-update-slice":
+        upd = _operand_bytes(op, comp, 1)
+        return 2 * upd                       # read update + write window
+    if op.opcode == "gather":
+        return 2 * res + _operand_bytes(op, comp, 1)   # rows + indices
+    if op.opcode == "scatter":
+        upd = _operand_bytes(op, comp, 2)
+        return 2 * upd + _operand_bytes(op, comp, 1)
+    if op.opcode in COLLECTIVES or op.opcode.endswith("-start"):
+        return 2 * res                       # HBM in + out around the wire
+    # default (dot, custom-call, copy, reduce, …): operands + result
+    b = res
+    for o in op.operands:
+        src = comp.ops.get(o)
+        if src is not None and src.opcode not in ("tuple",):
+            b += _shape_bytes(src.shape)
+    return b
+
+
+def _callees(comp: Computation) -> List[Tuple[str, float]]:
+    """(callee name, multiplier) pairs for fusions/calls/whiles/etc."""
+    out: List[Tuple[str, float]] = []
+    for op in comp.ops.values():
+        if op.opcode == "while":
+            m = _COND_BODY_RE.search(op.line)
+            if m:
+                out.append((m.group(1), 1.0))     # cond: ≈ trips, cheap
+                out.append((m.group(2), -1.0))    # body: resolved later
+            continue
+        m = _CALLS_RE.search(op.line)
+        if m:
+            out.append((m.group(1), 1.0))
+        m = _TO_APPLY_RE.search(op.line)
+        if m:
+            out.append((m.group(1), 1.0))
+    return out
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> Cost:
+    comps = parse_hlo(text)
+    if not comps:
+        return Cost()
+    if entry is None:
+        # entry is usually 'main...'; fall back to the last computation
+        entry = next((n for n in comps if n.startswith("main")),
+                     list(comps)[-1])
+
+    memo: Dict[str, Cost] = {}
+    mem_memo: Dict[str, bool] = {}
+
+    def total(name: str, depth=0, in_fusion=False) -> Cost:
+        key = f"{name}|{in_fusion}"
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        out = Cost()
+        if comp is None or depth > 64:
+            return out
+        out.add(_local_cost(comp, comps, in_fusion, mem_memo))
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                m = _COND_BODY_RE.search(op.line)
+                if not m:
+                    continue
+                cond_name, body_name = m.group(1), m.group(2)
+                trips = _trip_count(comps[cond_name]) \
+                    if cond_name in comps else 1
+                out.add(total(body_name, depth + 1, in_fusion), mult=trips)
+                out.add(total(cond_name, depth + 1, in_fusion), mult=trips)
+            else:
+                fus = op.opcode == "fusion"
+                mm = _CALLS_RE.search(op.line)
+                if mm:
+                    out.add(total(mm.group(1), depth + 1,
+                                  in_fusion or fus))
+                mm = _TO_APPLY_RE.search(op.line)
+                if mm and mm.group(1) in comps:
+                    out.add(total(mm.group(1), depth + 1, True))
+        memo[key] = out
+        return out
+
+    return total(entry)
+
+
+def cost_record(text: str) -> Dict[str, float]:
+    c = analyze_hlo(text)
+    rec = {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "bytes_fused_per_device": c.bytes_fused,
+        "collective_bytes_per_device": c.coll_bytes,
+        "collective_count": c.coll_count,
+    }
+    for k, v in c.coll_by_kind.items():
+        rec[f"coll_{k}"] = v
+    for k, v in sorted(c.bytes_by_op.items(), key=lambda kv: -kv[1])[:8]:
+        rec[f"bytes_{k}"] = v
+    return rec

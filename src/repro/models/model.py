@@ -1,0 +1,226 @@
+"""Model facade: builds (init, train_step, prefill_step, serve_step) for an
+arch config + mesh, with every input/output sharding specified.
+
+This is the single entry point used by the launcher, the dry-run, the
+benchmarks and the smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.archs import ArchConfig, ShapeCfg
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.sharding import Policy
+from repro.models.tuning import Tuning, OPTIMIZED, use_tuning
+from repro.optim.opt import make_optimizer
+
+F32 = jnp.float32
+CE_CHUNK = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    mesh: Optional[Mesh] = None
+    dtype: Any = jnp.bfloat16
+    lr: Optional[float] = None
+    tuning: Tuning = OPTIMIZED
+
+    @functools.cached_property
+    def policy(self) -> Policy:
+        return Policy(cfg=self.cfg, mesh=self.mesh)
+
+    @functools.cached_property
+    def optimizer(self):
+        return make_optimizer(self.cfg.optimizer, self.lr)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        return T.init_params(key, self.cfg, self.dtype)
+
+    def init_opt(self, params):
+        return self.optimizer.init(params)
+
+    # ------------------------------------------------------------ embeddings
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        return self.policy.shard(x.astype(self.dtype), "act")
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _logits(self, params, h):
+        logits = (h @ self._head(params)).astype(F32)
+        logits = L.softcap(logits, self.cfg.final_softcap)
+        return self.policy.shard(logits, "vocab")
+
+    # ------------------------------------------------------------------ loss
+    def _ce_loss(self, params, h, labels):
+        """Chunked cross-entropy over the sequence (never materializes the
+        full (B,S,V) logits — the 202k-vocab archs would need TBs)."""
+        B, S, D = h.shape
+        n_chunk = max(S // CE_CHUNK, 1)
+        csz = S // n_chunk
+        hc = h.reshape(B, n_chunk, csz, D).swapaxes(0, 1)
+        lc = labels.reshape(B, n_chunk, csz).swapaxes(0, 1)
+
+        def step(tot, xs):
+            hh, ll = xs
+            logits = self._logits(params, hh)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ll[..., None],
+                                       axis=-1)[..., 0]
+            return tot + jnp.sum(lse - gold), None
+
+        tot, _ = jax.lax.scan(step, jnp.zeros((), F32), (hc, lc))
+        return tot / (B * S)
+
+    def _aux(self, batch):
+        if self.cfg.family in ("vlm", "audio") and "src" in batch:
+            return {"src": batch["src"].astype(self.dtype)}
+        return {}
+
+    # ------------------------------------------------------------ train step
+    def train_step(self, params, opt_state, step, batch):
+        with use_tuning(self.tuning):
+            return self._train_step(params, opt_state, step, batch)
+
+    def _train_step(self, params, opt_state, step, batch):
+        cfg = self.cfg
+
+        def loss_fn(p):
+            x = self._embed(p, batch["tokens"])
+            aux = self._aux(batch)
+            if cfg.enc_layers:
+                aux = {"src": T.encoder_pass(cfg, p, aux["src"],
+                                             self.policy.shard)}
+            h, _ = T.backbone_full(cfg, p, x, self.policy.shard, aux,
+                                   collect_cache=False, use_remat=True)
+            return self._ce_loss(p, h, batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, gnorm = self.optimizer.update(
+            grads, params, opt_state, step)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    # ---------------------------------------------------------- prefill step
+    def prefill_step(self, params, batch):
+        with use_tuning(self.tuning):
+            return self._prefill_step(params, batch)
+
+    def _prefill_step(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        aux = self._aux(batch)
+        if cfg.enc_layers:
+            aux = {"src": T.encoder_pass(cfg, params, aux["src"],
+                                         self.policy.shard)}
+        h, caches = T.backbone_full(cfg, params, x, self.policy.shard, aux,
+                                    collect_cache=True, use_remat=False)
+        logits = self._logits(params, h[:, -1:, :])[:, 0]
+        return logits, caches
+
+    # ------------------------------------------------------------ serve step
+    def serve_step(self, params, cache, token, pos, src=None,
+                   long_mode=False):
+        """token: (B,1) int32; pos: scalar int32; cache stacked pytree."""
+        with use_tuning(self.tuning):
+            return self._serve_step(params, cache, token, pos, src,
+                                    long_mode)
+
+    def _serve_step(self, params, cache, token, pos, src, long_mode):
+        cfg = self.cfg
+        x = self._embed(params, token)
+        aux = {}
+        if src is not None:
+            aux = {"src": src.astype(self.dtype)}
+        h, cache = T.backbone_decode(cfg, params, x, cache, pos,
+                                     self.policy.shard, aux, long_mode)
+        logits = self._logits(params, h)[:, 0]
+        return logits, cache
+
+    # ------------------------------------------------------------ spec utils
+    def shaped(self, tree_specs, tree_shapes):
+        """ShapeDtypeStructs with NamedShardings attached."""
+        def mk(sd, spec):
+            sh = self.policy.named(spec) if spec is not None else None
+            return jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh)
+        return jax.tree_util.tree_map(mk, tree_shapes, tree_specs)
+
+    def abstract_params(self):
+        shapes = jax.eval_shape(lambda: T.init_params(
+            jax.random.PRNGKey(0), self.cfg, self.dtype))
+        specs = self.policy.param_specs(shapes)
+        return self.shaped(specs, shapes), specs
+
+    def abstract_opt(self, params_shapes):
+        shapes = jax.eval_shape(self.optimizer.init, params_shapes)
+        pspecs = self.policy.param_specs(params_shapes)
+        specs = self.policy.opt_state_specs(self.cfg.optimizer,
+                                            params_shapes, pspecs)
+        return self.shaped(specs, shapes)
+
+    def abstract_cache(self, B, S):
+        with use_tuning(self.tuning):
+            shapes = jax.eval_shape(
+                lambda: T.init_cache(self.cfg, B, S, self.dtype))
+            specs = self.policy.cache_specs(shapes)
+            return self.shaped(specs, shapes)
+
+
+def input_specs(model: Model, shape: ShapeCfg) -> Dict[str, Any]:
+    """All ShapeDtypeStruct stand-ins for one dry-run cell (no allocation)."""
+    cfg = model.cfg
+    pol = model.policy
+    B, S = shape.global_batch, shape.seq_len
+    dp = pol.dp_axes or None
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                               sharding=pol.named(pol.guard(P(dp, None),
+                                                            (B, S))))
+    params, _ = model.abstract_params()
+    out: Dict[str, Any] = {"params": params}
+
+    def src_struct(batch, length):
+        spec = pol.guard(P(dp, None, None), (batch, length, cfg.d_model))
+        return jax.ShapeDtypeStruct((batch, length, cfg.d_model),
+                                    jnp.bfloat16, sharding=pol.named(spec))
+
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "vlm":
+            batch["src"] = src_struct(B, cfg.n_img_tokens)
+        if cfg.family == "audio":
+            batch["src"] = src_struct(B, cfg.enc_seq)
+        out["opt_state"] = model.abstract_opt(
+            jax.eval_shape(lambda: T.init_params(
+                jax.random.PRNGKey(0), cfg, model.dtype)))
+        out["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        out["batch"] = batch
+    elif shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "vlm":
+            batch["src"] = src_struct(B, cfg.n_img_tokens)
+        if cfg.family == "audio":
+            batch["src"] = src_struct(B, cfg.enc_seq)
+        out["batch"] = batch
+    else:  # decode
+        out["cache"] = model.abstract_cache(B, S)
+        tok1 = jax.ShapeDtypeStruct(
+            (B, 1), jnp.int32,
+            sharding=pol.named(pol.guard(P(dp, None), (B, 1))))
+        out["token"] = tok1
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        if cfg.family == "vlm":
+            out["src"] = src_struct(B, cfg.n_img_tokens)
+        if cfg.family == "audio":
+            out["src"] = src_struct(B, cfg.enc_seq)
+    return out

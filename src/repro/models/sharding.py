@@ -1,0 +1,241 @@
+"""Sharding policy: DP/TP/EP/FSDP rules for every parameter and activation.
+
+One place owns all PartitionSpecs (DESIGN.md §5):
+
+  * TP ('model'): attention heads (or head_dim when H % tp != 0 — the
+    'dh' strategy), FFN hidden, MoE experts, vocab;
+  * DP ('data' ×'pod'): batch;
+  * FSDP ('data'): the non-TP dim of every ≥2-D weight (ZeRO-3 via
+    in_shardings — XLA all-gathers per use, reduce-scatters grads);
+  * decode caches: sequence dim over 'model' (uniform across kv-head
+    counts, incl. MQA), batch over DP when divisible.
+
+Every spec is divisibility-guarded: a dim that doesn't divide by its
+axis size falls back to replicated rather than failing to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.archs import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    cfg: ArchConfig
+    mesh: Optional[Mesh]
+    tp: str = "model"
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def fsdp(self) -> Optional[str]:
+        if self.mesh is None or "data" not in self.mesh.axis_names:
+            return None
+        return "data"
+
+    def _axsize(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _seqpar(self, seq_dim: int) -> bool:
+        from repro.models.tuning import get_tuning
+        return (get_tuning().attn_seq_parallel
+                and self.cfg.attn_shard == "dh"
+                and seq_dim % self._axsize(self.tp) == 0)
+
+    def guard(self, spec: P, shape) -> P:
+        """Drop axis assignments whose dim isn't divisible."""
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, ax in zip(shape, entries):
+            if ax is None or dim % self._axsize(ax) == 0:
+                out.append(ax)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def constraint(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        spec = self.guard(spec, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # -- activations ---------------------------------------------------------
+    def shard(self, x, kind: str):
+        if self.mesh is None:
+            return x
+        dp = self.dp_axes or None
+        tp = self.tp
+        c = self.cfg
+        if kind == "act":            # (B,S,D)
+            return self.constraint(x, P(dp, None, None))
+        if kind == "qkv":            # (B,S,H,dh)
+            if c.attn_shard == "head":
+                return self.constraint(x, P(dp, None, tp, None))
+            return self.constraint(x, P(dp, None, None, tp))
+        if kind == "ffn":            # (B,S,F)
+            return self.constraint(x, P(dp, None, tp))
+        if kind == "moe":            # (E,C,D)
+            return self.constraint(x, P(tp, None, None))
+        if kind == "cache":          # (B,kv,S,dh)
+            from repro.models.tuning import get_tuning
+            if get_tuning().cache_shard == "dh":
+                return self.constraint(x, P(dp, None, None, tp))
+            return self.constraint(x, P(dp, None, tp, None))
+        if kind == "q_decode":       # (B,1,H,dh): align with the cache so
+            from repro.models.tuning import get_tuning    # the contraction
+            if get_tuning().cache_shard == "dh":          # needs no permute
+                return self.constraint(x, P(dp, None, None, tp))
+            return self.shard(x, "qkv")
+        if kind == "q_seq":          # (B,S,H,dh): context parallelism —
+            # query sequence over tp so logits never cross shards
+            if x.shape[1] % self._axsize(tp) == 0:
+                return self.constraint(x, P(dp, tp, None, None))
+            return self.shard(x, "qkv")
+        if kind == "kv_full":        # (B,S,H,dh): replicate K/V over tp
+            if x.shape[1] % self._axsize(tp) == 0:
+                return self.constraint(x, P(dp, None, None, None))
+            return self.shard(x, "qkv")
+        if kind == "flash_ml":       # (B,H,S) flash scan carries: must be
+            # constrained or the while-loop fixes them replicated and
+            # all-gathers the sharded logits every KV block
+            if self._seqpar(x.shape[2]):
+                return self.constraint(x, P(dp, None, tp))
+            if c.attn_shard == "head":
+                return self.constraint(x, P(dp, tp, None))
+            return self.constraint(x, P(dp, None, None))
+        if kind == "flash_acc":      # (B,S,H,dh) flash accumulator
+            if self._seqpar(x.shape[1]):
+                return self.constraint(x, P(dp, tp, None, None))
+            return self.shard(x, "qkv")
+        if kind == "vocab":          # (B,S,V)
+            return self.constraint(x, P(dp, None, tp))
+        return x
+
+    # -- parameters ------------------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        tp, fs = self.tp, self.fsdp
+        stacked = path.startswith("units") or path.startswith("enc_units")
+        pre = (None,) if stacked else ()
+        name = path.split("/")[-1]
+        nd = len(shape) - len(pre)
+
+        def mk(*entries):
+            return self.guard(P(*pre, *entries), shape)
+
+        if name == "embed":
+            return mk(tp, fs)
+        if name == "lm_head":
+            return mk(fs, tp)
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "wi",
+                    "wf", "wo_gate", "w", "r"):
+            if nd == 3:  # MoE expert stacks (E, D, F)
+                return mk(tp, fs, None)
+            return mk(fs, tp)
+        if name in ("wo", "out_proj", "w_down"):
+            if nd == 3:  # (E, F, D)
+                return mk(tp, None, fs)
+            return mk(tp, fs)
+        if name == "router":
+            return mk(None, None)
+        if name in ("x_bc", "x_dt", "A_log"):
+            return mk(tp, None)
+        if name == "conv_w":
+            return mk(None, tp)
+        if name in ("bq", "bk", "bv", "conv_b", "dt_bias", "skip_d", "b"):
+            return mk(tp)
+        # norms and anything else: replicated (modulo stack axis)
+        return mk()
+
+    def param_specs(self, params) -> Any:
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in tree.items()}
+            if isinstance(tree, (tuple, list)):
+                t = type(tree)
+                return t(walk(v, prefix) for v in tree)
+            return self.param_spec(prefix, tree.shape)
+        return walk(params, "")
+
+    # -- opt state -------------------------------------------------------------
+    def opt_state_specs(self, opt_name: str, params, pspecs) -> Any:
+        if opt_name == "adamw":
+            return {"m": pspecs, "v": pspecs}
+        # adafactor: r drops last dim, c drops second-to-last.
+        from repro.optim.opt import adafactor  # for factored() parity
+        def st(p, spec):
+            entries = list(spec) + [None] * (p.ndim - len(spec))
+            if p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128:
+                return {"r": P(*entries[:-1]),
+                        "c": P(*(entries[:-2] + entries[-1:]))}
+            return {"v": P(*entries)}
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_s = tdef.flatten_up_to(pspecs)
+        return tdef.unflatten([st(p, s) for p, s in zip(flat_p, flat_s)])
+
+    # -- batch / cache ---------------------------------------------------------
+    def batch_specs(self):
+        dp = self.dp_axes or None
+        return P(dp, None)
+
+    def cache_spec(self, path: str, shape) -> P:
+        dp = self.dp_axes or None
+        tp = self.tp
+        name = path.split("/")[-1]
+        pre = (None,)  # stacked repeat axis
+        if name in ("k", "v"):       # (R,B,kv,S,dh)
+            from repro.models.tuning import get_tuning
+            if get_tuning().cache_shard == "dh":
+                # head_dim-sharded: the per-token dynamic-update-slice is
+                # along unsharded S → no SPMD full-remat (tuning.py)
+                return self.guard(P(*pre, dp, None, None, tp), shape)
+            return self.guard(P(*pre, dp, None, tp, None), shape)
+        if name in ("h", "conv"):    # mamba (R,B,E,N)/(R,B,dc-1,E) or slstm
+            if len(shape) == 4 and name == "h":
+                return self.guard(P(*pre, dp, tp, None), shape)
+            if len(shape) == 4:
+                return self.guard(P(*pre, dp, None, tp), shape)
+            return self.guard(P(*pre, dp, tp), shape)
+        if name in ("C",):           # mlstm (R,B,H,dh,dh)
+            return self.guard(P(*pre, dp, None, tp, None), shape)
+        if name in ("n",):
+            return self.guard(P(*pre, dp, None, tp), shape)
+        if name == "c":
+            return self.guard(P(*pre, dp, tp), shape)
+        return self.guard(P(*pre, dp), shape)
+
+    def cache_specs(self, cache) -> Any:
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in tree.items()}
+            if isinstance(tree, (tuple, list)):
+                t = type(tree)
+                return t(walk(v, prefix) for v in tree)
+            return self.cache_spec(prefix, tree.shape)
+        return walk(cache, "")
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)

@@ -1,0 +1,279 @@
+"""State-space / recurrent mixers: Mamba (Jamba), mLSTM + sLSTM (xLSTM).
+
+All three expose a train form (full sequence, chunked to bound memory)
+and a decode form (single step carrying explicit recurrent state) — the
+state is the sub-quadratic replacement for a KV cache, which is what
+makes jamba/xlstm eligible for the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ArchConfig
+
+F32 = jnp.float32
+CHUNK = 64  # sequence chunk for the associative scans (memory bound)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, diag A) — Jamba's mixer
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    D = cfg.d_model
+    mc = cfg.mamba
+    E = mc.expand * D
+    N = mc.d_state
+    ks = jax.random.split(key, 7)
+    s = lambda sh, k: (jax.random.normal(k, sh, F32) / sh[0] ** 0.5).astype(dtype)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "in_proj": s((D, 2 * E), ks[0]),
+        "conv_w": s((mc.d_conv, E), ks[1]),
+        "conv_b": jnp.zeros((E,), dtype),
+        "x_bc": s((E, 2 * N), ks[2]),          # data-dependent B, C
+        "x_dt": s((E, 1), ks[3]),              # data-dependent Δ (rank-1)
+        "dt_bias": jnp.zeros((E,), dtype),
+        "A_log": jnp.zeros((E, N), F32),       # A = -exp(A_log) (stable)
+        "skip_d": jnp.ones((E,), dtype),
+        "out_proj": s((E, D), ks[4]),
+    }
+
+
+def _mamba_scan_chunk(h0, a, bu):
+    """h_t = a_t * h_{t-1} + bu_t over a chunk; a/bu: (B, T, E, N)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b2 + a2 * b1
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    h = a_c * h0[:, None] + b_c
+    return h, h[:, -1]
+
+
+def mamba_train(p, x, cfg: ArchConfig, shard):
+    """x: (B,S,D) -> (B,S,D); chunked parallel scan over S."""
+    B, S, D = x.shape
+    mc = cfg.mamba
+    E, N = mc.expand * D, mc.d_state
+    xz = x @ p["in_proj"]                                   # (B,S,2E)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "ffn")
+    # depthwise causal conv (kernel d_conv)
+    pad = jnp.pad(xin, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(mc.d_conv))
+    u = jax.nn.silu(conv + p["conv_b"])
+    # selective parameters
+    bc = jnp.einsum("bse,en->bsn", u, p["x_bc"])            # (B,S,2N)
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bse,eo->bse", u, p["x_dt"])
+                         + p["dt_bias"])                    # (B,S,E)
+    A = -jnp.exp(p["A_log"])                                # (E,N)
+    nchunk = max(S // CHUNK, 1)
+    csz = S // nchunk
+    u_c = u.reshape(B, nchunk, csz, E).swapaxes(0, 1)
+    dt_c = dt.reshape(B, nchunk, csz, E).swapaxes(0, 1)
+    B_c = Bmat.reshape(B, nchunk, csz, N).swapaxes(0, 1)
+    C_c = Cmat.reshape(B, nchunk, csz, N).swapaxes(0, 1)
+
+    def step(h, xs):
+        uc, dtc, bc_, cc = xs
+        a = jnp.exp(dtc[..., None].astype(F32) * A)         # (B,T,E,N)
+        bu = (dtc * uc)[..., None].astype(F32) * bc_[..., None, :]
+        hs, h1 = _mamba_scan_chunk(h, a, bu)
+        y = jnp.einsum("bten,btn->bte", hs, cc.astype(F32))
+        return h1, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, E, N), F32)
+    _, ys = jax.lax.scan(step, h0, (u_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, E)
+    y = (y + u * p["skip_d"]) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_init_state(cfg: ArchConfig, B, dtype):
+    mc = cfg.mamba
+    E, N = mc.expand * cfg.d_model, mc.d_state
+    return {"h": jnp.zeros((B, E, N), F32),
+            "conv": jnp.zeros((B, mc.d_conv - 1, E), dtype)}
+
+
+def mamba_decode(p, x, state, cfg: ArchConfig):
+    """x: (B,1,D); state: {'h': (B,E,N), 'conv': (B,d_conv-1,E)}."""
+    B = x.shape[0]
+    mc = cfg.mamba
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"], xin[:, None]], axis=1)
+    conv = jnp.einsum("bke,ke->be", hist, p["conv_w"])
+    u = jax.nn.silu(conv + p["conv_b"])
+    bc = jnp.einsum("be,en->bn", u, p["x_bc"])
+    Bv, Cv = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("be,eo->be", u, p["x_dt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None].astype(F32) * A)
+    h = a * state["h"] + (dt * u)[..., None].astype(F32) * Bv[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, Cv.astype(F32)).astype(x.dtype)
+    y = (y + u * p["skip_d"]) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory; linear-attention chunked train form)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig, dtype):
+    D = cfg.d_model
+    E = 2 * D
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    s = lambda sh, k: (jax.random.normal(k, sh, F32) / sh[0] ** 0.5).astype(dtype)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "wq": s((D, E), ks[0]),
+        "wk": s((D, E), ks[1]),
+        "wv": s((D, E), ks[2]),
+        "wi": s((D, H), ks[3]),                 # input gate (per head)
+        "wf": s((D, H), ks[4]),                 # forget gate
+        "wo_gate": s((D, E), ks[5]),
+        "out_proj": s((E, D), jax.random.fold_in(key, 9)),
+    }
+
+
+def _mlstm_heads(cfg: ArchConfig):
+    E = 2 * cfg.d_model
+    H = cfg.n_heads
+    return H, E // H
+
+
+def mlstm_train(p, x, cfg: ArchConfig, shard):
+    """Chunkwise linear attention with per-head scalar decay gates."""
+    B, S, D = x.shape
+    H, dh = _mlstm_heads(cfg)
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, H, dh) * dh ** -0.5
+    v = (x @ p["wv"]).reshape(B, S, H, dh)
+    q, k, v = (shard(t, "qkv") for t in (q, k, v))
+    i_g = jax.nn.sigmoid((x @ p["wi"]).astype(F32))           # (B,S,H)
+    f_g = jax.nn.sigmoid((x @ p["wf"]).astype(F32))
+    nchunk = max(S // CHUNK, 1)
+    csz = S // nchunk
+    rs = lambda t: t.reshape(B, nchunk, csz, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, i_g, f_g))
+
+    def step(carry, xs):
+        Cmem, nmem = carry                                    # (B,H,dh,dh)
+        qq, kk, vv, ii, ff = xs
+        # intra-chunk: masked quadratic attention with decay weights
+        logf = jnp.log(ff + 1e-8)                             # (B,T,H)
+        cumf = jnp.cumsum(logf, axis=1)
+        # decay from t' to t  (t >= t')
+        dmat = cumf[:, :, None] - cumf[:, None, :]            # (B,T,T',H)
+        mask = jnp.tril(jnp.ones((csz, csz), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)
+        w = w * ii[:, None]                                   # gate at source
+        att = jnp.einsum("bthd,bshd->btsh", qq, kk).astype(F32)
+        intra = jnp.einsum("btsh,btsh,bshd->bthd", att, w, vv.astype(F32))
+        # inter-chunk: contribution of the carried matrix memory
+        decay_to_t = jnp.exp(cumf)                            # (B,T,H)
+        inter = jnp.einsum("bthd,bhde,bth->bthe", qq.astype(F32), Cmem,
+                           decay_to_t)
+        norm = jnp.einsum("bthd,bhd,bth->bth", qq.astype(F32), nmem,
+                          decay_to_t)
+        norm = norm + jnp.einsum("btsh,btsh->bth", att, w)
+        y = (intra + inter) / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+        # update memory to end of chunk
+        tot = cumf[:, -1]                                      # (B,H)
+        decay_from_s = jnp.exp(tot[:, None] - cumf)            # (B,T,H)
+        upd = jnp.einsum("bshd,bshe,bsh->bhde", kk.astype(F32),
+                         vv.astype(F32), decay_from_s * ii)
+        nupd = jnp.einsum("bshd,bsh->bhd", kk.astype(F32), decay_from_s * ii)
+        Cmem = Cmem * jnp.exp(tot)[..., None, None] + upd
+        nmem = nmem * jnp.exp(tot)[..., None] + nupd
+        return (Cmem, nmem), y.astype(x.dtype)
+
+    C0 = jnp.zeros((B, H, dh, dh), F32)
+    n0 = jnp.zeros((B, H, dh), F32)
+    _, ys = jax.lax.scan(step, (C0, n0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H * dh)
+    o = jax.nn.sigmoid(x @ p["wo_gate"]) * y
+    return o @ p["out_proj"]
+
+
+def mlstm_init_state(cfg: ArchConfig, B, dtype):
+    H, dh = _mlstm_heads(cfg)
+    return {"C": jnp.zeros((B, H, dh, dh), F32),
+            "n": jnp.zeros((B, H, dh), F32)}
+
+
+def mlstm_decode(p, x, state, cfg: ArchConfig):
+    B = x.shape[0]
+    H, dh = _mlstm_heads(cfg)
+    xt = x[:, 0]
+    q = (xt @ p["wq"]).reshape(B, H, dh)
+    k = (xt @ p["wk"]).reshape(B, H, dh) * dh ** -0.5
+    v = (xt @ p["wv"]).reshape(B, H, dh)
+    i_g = jax.nn.sigmoid((xt @ p["wi"]).astype(F32))           # (B,H)
+    f_g = jax.nn.sigmoid((xt @ p["wf"]).astype(F32))
+    C = state["C"] * f_g[..., None, None] + \
+        jnp.einsum("bhd,bhe,bh->bhde", k.astype(F32), v.astype(F32), i_g)
+    n = state["n"] * f_g[..., None] + k.astype(F32) * i_g[..., None]
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(F32), C)
+    norm = jnp.einsum("bhd,bhd->bh", q.astype(F32), n)
+    y = (y / jnp.maximum(jnp.abs(norm), 1.0)[..., None]).astype(x.dtype)
+    y = y.reshape(B, H * dh)
+    o = jax.nn.sigmoid(xt @ p["wo_gate"]) * y
+    return (o @ p["out_proj"])[:, None], {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory recurrent; sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s = lambda sh, k: (jax.random.normal(k, sh, F32) / sh[0] ** 0.5).astype(dtype)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w": s((D, 4 * D), ks[0]),
+        "r": s((D, 4 * D), ks[1]),
+        "b": jnp.zeros((4 * D,), dtype),
+        "out_proj": s((D, D), ks[2]),
+    }
+
+
+def _slstm_cell(p, xt, h, c):
+    gates = xt @ p["w"] + h @ p["r"] + p["b"]
+    i, f, z, o = jnp.split(gates.astype(F32), 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h.astype(xt.dtype), c
+
+
+def slstm_train(p, x, cfg: ArchConfig, shard):
+    B, S, D = x.shape
+
+    def step(carry, xt):
+        h, c = carry
+        h, c = _slstm_cell(p, xt, h, c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, D), x.dtype)
+    c0 = jnp.zeros((B, D), F32)
+    _, ys = jax.lax.scan(step, (h0, c0), x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1) @ p["out_proj"]
+
+
+def slstm_init_state(cfg: ArchConfig, B, dtype):
+    D = cfg.d_model
+    return {"h": jnp.zeros((B, D), dtype), "c": jnp.zeros((B, D), F32)}
+
+
+def slstm_decode(p, x, state, cfg: ArchConfig):
+    h, c = _slstm_cell(p, x[:, 0], state["h"], state["c"])
+    return (h @ p["out_proj"])[:, None], {"h": h, "c": c}

@@ -1,0 +1,90 @@
+"""Performance-tuning knobs (EXPERIMENTS.md §Perf).
+
+Each knob selects between the paper-faithful/baseline lowering and a
+beyond-baseline optimized one, so both stay runnable and the roofline
+deltas stay reproducible:
+
+  cache_shard:
+    'seq' (baseline) — decode KV caches sharded on the sequence dim.
+        dynamic-update-slice at a *dynamic* position along the sharded
+        dim forces SPMD's involuntary full rematerialization: every
+        decode step all-gathers and repartitions the whole cache.
+    'dh'  (optimized) — shard the head_dim instead (divides the TP axis
+        for every assigned arch, unlike kv-heads).  The per-token DUS is
+        then along unsharded S (local), and the attention contraction
+        over dh turns into a small per-layer psum of (B,kv,rep,S)
+        logits — trading TBs of HBM+DCN churn for MBs of ICI.
+
+  moe_dispatch:
+    'scatter' (baseline) — pack tokens into the (E,C,D) expert buffer
+        with `.at[slot].set(xt[tok])`.  A scatter of D-wide rows into an
+        expert-sharded buffer lowers to an all-reduce over the FULL
+        buffer per MoE layer (≈E·C·D bytes — dominates the collective
+        roofline term for the MoE archs).
+    'gather' — scatter only int32 token *indices* into the slot map
+        (E·C·4 bytes), then build the buffer with a row gather
+        xt[tok_for_slot].  Halves the wire cost but the backward pass
+        still scatters D-wide rows, and the expert compute is replicated
+        across the data axis.
+    'shard_map' (optimized) — explicit expert parallelism: each (data,
+        model) shard routes its LOCAL tokens to its LOCAL experts and
+        the per-token outputs are psum-combined over 'model'.  Per-layer
+        wire cost drops from the global buffer (≈86 GB for qwen3) to the
+        local activations (≈0.5 GB), and the 16× data-axis compute
+        redundancy disappears.  This is the paper's own principle — each
+        owner processes only its partition, then combines — applied at
+        LM scale.  Falls back to 'gather' when no mesh is present.
+
+The active Tuning is a contextvar bound at trace time by Model's step
+functions, so the knobs thread through jit without signature churn.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    cache_shard: str = "dh"         # 'seq' | 'dh'
+    moe_dispatch: str = "shard_map"  # 'scatter' | 'gather' | 'shard_map'
+    # decode_unroll: scan-over-units keeps the HLO small but makes every
+    # step dynamic-slice + dynamic-update-slice the whole stacked cache
+    # carry; unrolling (standard for serving) turns those into static
+    # slices that alias away.  Train/prefill keep the scan.
+    decode_unroll: bool = True
+    # window_slice: windowed decode attention reads only the window-sized
+    # cache slice (dynamic-slice along unsharded S) instead of computing
+    # full-length logits and masking — 128× less cache traffic at 512k.
+    window_slice: bool = True
+    # attn_seq_parallel: for archs whose head count doesn't divide the TP
+    # axis (attn_shard='dh'), head_dim-sharded flash attention contracts
+    # the sharded dim → a psum of the full (B,H,S,Kb) logits per KV block
+    # (TBs/step at 32k).  Shard the QUERY SEQUENCE over 'model' instead
+    # (context parallelism): logits stay local; only K/V replicate
+    # (MBs/layer).  Applies to train/prefill self-attention when
+    # S % tp == 0; falls back to the dh layout otherwise.
+    attn_seq_parallel: bool = True
+
+
+BASELINE = Tuning(cache_shard="seq", moe_dispatch="scatter",
+                  decode_unroll=False, window_slice=False,
+                  attn_seq_parallel=False)
+OPTIMIZED = Tuning()
+
+_current: contextvars.ContextVar[Tuning] = contextvars.ContextVar(
+    "repro_tuning", default=OPTIMIZED)
+
+
+def get_tuning() -> Tuning:
+    return _current.get()
+
+
+@contextlib.contextmanager
+def use_tuning(t: Tuning):
+    tok = _current.set(t)
+    try:
+        yield
+    finally:
+        _current.reset(tok)

@@ -1,0 +1,92 @@
+"""Algorithms vs from-scratch oracles, on the jnp engine (paper's OpenMP
+analogue).  Dynamic results must equal the static oracle on the
+post-update graph — the paper's correctness criterion."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import random_digraph, random_symgraph, sym_stream
+from repro.graph import random_updates
+from repro.core.engine import JnpEngine
+from repro.algos import sssp, pagerank, triangles, oracles
+
+
+@pytest.fixture(scope="module")
+def setup():
+    n, csr, edges, w = random_digraph()
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=64)
+    return n, csr, edges, w, eng, g
+
+
+def test_static_sssp(setup):
+    n, csr, edges, w, eng, g = setup
+    props = sssp.static_sssp(eng, g, source=0)
+    ref = oracles.sssp_oracle(n, edges, w, 0)
+    got = np.minimum(np.asarray(props["dist"]).astype(np.int64), oracles.INF)
+    assert np.array_equal(got, ref)
+    # parent pointers form valid shortest paths
+    par = np.asarray(props["parent"])
+    for v in range(n):
+        if got[v] < oracles.INF and v != 0:
+            p = par[v]
+            assert p >= 0 and got[p] < got[v]
+
+
+@pytest.mark.parametrize("percent,batch", [(10, 8), (30, 16)])
+def test_dynamic_sssp(setup, percent, batch):
+    n, csr, edges, w, eng, g = setup
+    ups = random_updates(csr, percent=percent, seed=7)
+    _, props = sssp.dyn_sssp(eng, g, 0, ups, batch_size=batch)
+    e2, w2 = oracles.edges_after_updates(n, edges, w, ups.adds, ups.dels)
+    ref = oracles.sssp_oracle(n, e2, w2, 0)
+    got = np.minimum(np.asarray(props["dist"]).astype(np.int64), oracles.INF)
+    assert np.array_equal(got, ref)
+
+
+def test_static_pr(setup):
+    n, csr, edges, w, eng, g = setup
+    props = pagerank.static_pr(eng, g)
+    ref = oracles.pagerank_oracle(n, edges)
+    np.testing.assert_allclose(np.asarray(props["pr"]), ref,
+                               rtol=2e-3, atol=1e-5)
+
+
+def test_dynamic_pr(setup):
+    n, csr, edges, w, eng, g = setup
+    ups = random_updates(csr, percent=20, seed=9)
+    _, props = pagerank.dyn_pr(eng, g, ups, batch_size=8)
+    e2, _ = oracles.edges_after_updates(n, edges, w, ups.adds, ups.dels)
+    ref = oracles.pagerank_oracle(n, e2)
+    np.testing.assert_allclose(np.asarray(props["pr"]), ref,
+                               rtol=5e-2, atol=1e-4)
+
+
+def test_static_tc():
+    n, csr, edges = random_symgraph()
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=128)
+    c = triangles.static_tc(eng, g)
+    assert int(c) == oracles.tc_oracle(n, edges)
+
+
+def test_dynamic_tc():
+    n, csr, edges = random_symgraph()
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=256)
+    ups = sym_stream(csr, percent=20, seed=5)
+    _, c = triangles.dyn_tc(eng, g, ups, batch_size=16)
+    e2, _ = oracles.edges_after_updates(
+        n, edges, np.ones(len(edges), np.int32), ups.adds, ups.dels)
+    assert int(c) == oracles.tc_oracle(n, e2)
+
+
+def test_propagate_flags():
+    # chain 0->1->2, isolated 3
+    from repro.graph import build_csr
+    csr = build_csr(4, np.array([(0, 1), (1, 2)]))
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=2)
+    props = {"flag": jnp.array([True, False, False, False])}
+    props = eng.propagate_flags(g, props, "flag")
+    assert np.asarray(props["flag"]).tolist() == [True, True, True, False]

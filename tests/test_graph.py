@@ -1,0 +1,99 @@
+"""diff-CSR substrate: unit + hypothesis property tests.
+
+Property: any sequence of add/delete batches applied to a DynGraph equals
+a python dict-of-sets model of the same edge multiset.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (build_csr, from_csr, update_csr_add, update_csr_del,
+                         merge, is_edge, edge_weight)
+from repro.graph.csr import row_searchsorted
+from repro.graph.diffcsr import DynGraph
+
+
+def test_fig6_example():
+    """The paper's Figure 6 walk-through."""
+    edges = [(0, 1), (1, 2), (1, 3), (2, 0), (3, 4), (4, 5), (5, 3)]
+    g = from_csr(build_csr(6, np.array(edges)), diff_capacity=4)
+    g = update_csr_del(g, jnp.array([1]), jnp.array([3]))      # B->D deleted
+    assert not bool(is_edge(g, 1, 3))
+    g = update_csr_add(g, jnp.array([4]), jnp.array([2]))      # E->C added
+    assert bool(is_edge(g, 4, 2))
+    # vacant-slot revival: re-adding B->D reuses its tombstoned slot
+    before_diff = int(jnp.sum(g.d_src < g.n))
+    g = update_csr_add(g, jnp.array([1]), jnp.array([3]), jnp.array([9]))
+    assert bool(is_edge(g, 1, 3)) and int(edge_weight(g, 1, 3)) == 9
+    assert int(jnp.sum(g.d_src < g.n)) == before_diff  # no diff growth
+    assert g.out_degrees().tolist() == [1, 2, 1, 1, 2, 1]
+
+
+def test_overflow_counter():
+    g = from_csr(build_csr(4, np.array([(0, 1)])), diff_capacity=2)
+    g = update_csr_add(g, jnp.array([0, 0, 0, 1]), jnp.array([2, 3, 1, 0]))
+    # 0->1 revives in main; 0->2, 0->3 fill diff; 1->0 overflows
+    assert int(g.overflow) == 1
+    gm = merge(g, diff_capacity=8)
+    assert int(gm.overflow) == 0
+    for u, v in [(0, 1), (0, 2), (0, 3)]:
+        assert bool(is_edge(gm, u, v))
+    assert not bool(is_edge(gm, 1, 0))  # dropped by capacity, as declared
+
+
+def test_row_searchsorted():
+    vals = jnp.array([1, 3, 5, 2, 2, 9], jnp.int32)  # rows [0,3) and [3,6)
+    lo = jnp.array([0, 3, 3], jnp.int32)
+    hi = jnp.array([3, 6, 6], jnp.int32)
+    q = jnp.array([3, 2, 10], jnp.int32)
+    out = row_searchsorted(vals, lo, hi, q)
+    assert out.tolist() == [1, 3, 6]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_updates_match_model(data):
+    n = data.draw(st.integers(4, 20))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    m = data.draw(st.integers(0, 40))
+    edges = rng.integers(0, n, size=(m, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    csr = build_csr(n, edges)
+    model = set(map(tuple, np.stack(
+        [np.asarray(csr.src), np.asarray(csr.dst)], 1).tolist())) \
+        if csr.num_edges else set()
+    g = from_csr(csr, diff_capacity=64)
+
+    for _ in range(data.draw(st.integers(1, 4))):
+        k = data.draw(st.integers(1, 6))
+        adds = rng.integers(0, n, size=(k, 2))
+        adds = adds[adds[:, 0] != adds[:, 1]]
+        dels_pool = list(model) or [(0, 1)]
+        didx = rng.integers(0, len(dels_pool), size=k)
+        dels = np.array([dels_pool[i] for i in didx])
+        if len(dels):
+            g = update_csr_del(g, jnp.asarray(dels[:, 0], jnp.int32),
+                               jnp.asarray(dels[:, 1], jnp.int32))
+            model -= set(map(tuple, dels.tolist()))
+        if len(adds):
+            g = update_csr_add(g, jnp.asarray(adds[:, 0], jnp.int32),
+                               jnp.asarray(adds[:, 1], jnp.int32))
+            model |= set(map(tuple, adds.tolist()))
+
+    assert int(g.overflow) == 0
+    # full membership check against the model
+    qs, qd = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    got = np.asarray(is_edge(g, qs.ravel(), qd.ravel())).reshape(n, n)
+    want = np.zeros((n, n), bool)
+    for u, v in model:
+        want[u, v] = True
+    assert np.array_equal(got, want)
+    # degrees
+    deg = np.asarray(g.out_degrees())
+    wdeg = want.sum(1)
+    assert np.array_equal(deg, wdeg)
+    # merge preserves the edge set
+    gm = merge(g)
+    got2 = np.asarray(is_edge(gm, qs.ravel(), qd.ravel())).reshape(n, n)
+    assert np.array_equal(got2, want)
