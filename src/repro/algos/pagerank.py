@@ -85,11 +85,15 @@ def dyn_pr(engine: Engine, g, stream: UpdateStream, batch_size: int,
         props = static_pr(engine, g, beta, delta, max_iter)
 
     for batch in stream.batches(batch_size):
+        # Both endpoints seed the affected set: the destination's in-edge
+        # set changed, and the source's out-degree changed (which rescales
+        # its contribution to *all* of its out-neighbors).
         # --- decremental half ----------------------------------------------
         def on_delete(p: Props) -> Props:
             tgt = jnp.where(batch.del_mask, batch.del_dst, engine.n_pad)
-            return {**p, "modified":
-                    jnp.zeros_like(p["modified"]).at[tgt].set(True, mode="drop")}
+            tgs = jnp.where(batch.del_mask, batch.del_src, engine.n_pad)
+            m = jnp.zeros_like(p["modified"]).at[tgt].set(True, mode="drop")
+            return {**p, "modified": m.at[tgs].set(True, mode="drop")}
 
         props = engine.vertex_map(g, on_delete, props)
         props = engine.propagate_flags(g, props, "modified")
@@ -100,8 +104,9 @@ def dyn_pr(engine: Engine, g, stream: UpdateStream, batch_size: int,
         # --- incremental half ----------------------------------------------
         def on_add(p: Props) -> Props:
             tgt = jnp.where(batch.add_mask, batch.add_dst, engine.n_pad)
-            return {**p, "modified":
-                    jnp.zeros_like(p["modified"]).at[tgt].set(True, mode="drop")}
+            tgs = jnp.where(batch.add_mask, batch.add_src, engine.n_pad)
+            m = jnp.zeros_like(p["modified"]).at[tgt].set(True, mode="drop")
+            return {**p, "modified": m.at[tgs].set(True, mode="drop")}
 
         props = engine.vertex_map(g, on_add, props)
         props = engine.propagate_flags(g, props, "modified")  # paper order:

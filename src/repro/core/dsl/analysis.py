@@ -168,9 +168,120 @@ def _analyze_sweep(fa: A.ForAll, node_props: Dict[str, str],
     return info
 
 
+# Attributes the runtime provides without a declaration: edge weight and
+# the endpoints of an update-batch entry.
+_BUILTIN_ATTRS = {"weight", "source", "destination"}
+
+
+def _validate_names(func: A.FuncDef, symbols: Dict[str, Symbol],
+                    nprops: Dict[str, str], eprops: Dict[str, str],
+                    func_names: Set[str]) -> None:
+    """Reject undeclared properties and undeclared-variable reads.
+
+    The paper's contract: analysis failure rejects the program.  Two
+    checks: (1) every ``x.p`` attribute access names a declared
+    propNode/propEdge (or a builtin like ``e.weight``/``u.source``);
+    (2) every bare identifier read is a declared symbol, a loop
+    variable, a property (the ``filter(modified == True)`` shorthand),
+    or a function name.
+    """
+    loop_vars = {n.var for n in A.walk(func)
+                 if isinstance(n, (A.ForAll, A.OnUpdate))}
+    flag_vars = {n.flag for n in A.walk(func) if isinstance(n, A.FixedPoint)}
+    known = (set(symbols) | loop_vars | flag_vars | set(nprops)
+             | set(eprops) | func_names | {"abs"})
+    call_funcs = {id(n.func) for n in A.walk(func) if isinstance(n, A.Call)}
+    for node in A.walk(func):
+        if isinstance(node, A.Attr) and id(node) not in call_funcs:
+            if node.name not in nprops and node.name not in eprops \
+                    and node.name not in _BUILTIN_ATTRS:
+                raise SemanticError(
+                    f"line {node.line}: undeclared property "
+                    f"'{node.name}' (declare a propNode/propEdge)")
+        if isinstance(node, A.Name) and node.ident not in known:
+            raise SemanticError(
+                f"line {node.line}: read of undeclared name "
+                f"'{node.ident}'")
+
+
+def _validate_init_order(func: A.FuncDef) -> None:
+    """Reject reads of a primitive local before its first assignment.
+
+    Path-sensitive where it matters: an assignment inside a conditional
+    branch only initializes the variable if every branch assigns it; a
+    while/forall body may run zero times, so its assignments never
+    initialize anything for the code after the loop; a do-while body
+    always runs once, so its assignments do (and the body is scanned
+    *before* the loop condition is checked).
+    """
+
+    def check_expr(e: Optional[A.Expr], uninit: Set[str]):
+        if e is None:
+            return
+        for n in A.walk(e):
+            if isinstance(n, A.Name) and n.ident in uninit:
+                raise SemanticError(
+                    f"line {n.line}: '{n.ident}' is read before it is "
+                    f"written")
+
+    def scan(stmts, uninit: Set[str]):
+        for st in stmts:
+            if isinstance(st, A.Decl):
+                check_expr(st.init, uninit)
+                if st.init is None and not st.type.is_prop and \
+                        st.type.name in ("int", "long", "float", "double",
+                                         "bool"):
+                    uninit.add(st.name)
+                else:
+                    uninit.discard(st.name)
+            elif isinstance(st, A.Assign):
+                check_expr(st.value, uninit)
+                if isinstance(st.target, A.Name):
+                    if st.op == "=":
+                        uninit.discard(st.target.ident)
+                    elif st.target.ident in uninit:
+                        raise SemanticError(
+                            f"line {st.line}: '{st.target.ident}' is "
+                            f"updated before it is written")
+                else:
+                    check_expr(st.target, uninit)
+            elif isinstance(st, A.MultiAssign):
+                for v in st.values:
+                    check_expr(v, uninit)
+            elif isinstance(st, A.If):
+                check_expr(st.cond, uninit)
+                u_then = set(uninit)
+                scan(st.then.stmts, u_then)
+                if st.orelse is not None:
+                    u_else = set(uninit)
+                    scan(st.orelse.stmts, u_else)
+                    # initialized only if assigned on *both* paths
+                    uninit.clear()
+                    uninit.update(u_then | u_else)
+                # no else: the skip path keeps everything uninitialized
+            elif isinstance(st, A.DoWhile):
+                scan(st.body.stmts, uninit)      # body runs before cond
+                check_expr(st.cond, uninit)
+            elif isinstance(st, A.While):
+                check_expr(st.cond, uninit)
+                scan(st.body.stmts, set(uninit))  # may run zero times
+            elif isinstance(st, A.ForAll):
+                check_expr(st.filter, uninit)
+                scan(st.body.stmts, set(uninit))
+            elif isinstance(st, (A.FixedPoint, A.BatchStmt, A.OnUpdate)):
+                scan(st.body.stmts, set(uninit))
+            elif isinstance(st, A.CallStmt):
+                check_expr(st.call, uninit)
+            elif isinstance(st, A.Return):
+                check_expr(st.value, uninit)
+
+    scan(func.body.stmts, set())
+
+
 def analyze(prog: A.ProgramAST) -> Dict[str, FuncInfo]:
     """Build per-function symbol tables + sweep analyses; validate."""
     infos: Dict[str, FuncInfo] = {}
+    func_names = {f.name for f in prog.funcs}
     for func in prog.funcs:
         symbols: Dict[str, Symbol] = {}
         for p in func.params:
@@ -179,6 +290,8 @@ def analyze(prog: A.ProgramAST) -> Dict[str, FuncInfo]:
             if isinstance(node, A.Decl):
                 symbols.setdefault(node.name, Symbol(node.name, node.type))
         nprops, eprops = _collect_props(func)
+        _validate_names(func, symbols, nprops, eprops, func_names)
+        _validate_init_order(func)
         sweeps = []
         for node in A.walk(func):
             if isinstance(node, A.ForAll):

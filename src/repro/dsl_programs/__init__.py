@@ -1,0 +1,22 @@
+"""The paper's appendix DSL programs (Figs. 19-21), shipped as data.
+
+Each ``.sp`` file holds the ``static*`` and ``Dyn*`` functions of one
+algorithm in the StarPlat-Dynamic appendix syntax; they compile through
+``repro.core.dsl.compile_source`` and run on any engine.  See
+README.md ("The .sp program format") for the syntax and for how to add
+a new algorithm to the conformance matrix.
+"""
+import pathlib
+
+_HERE = pathlib.Path(__file__).resolve().parent
+
+PROGRAMS = ("sssp", "pagerank", "tc")
+
+
+def path(name: str) -> str:
+    """Absolute path of a shipped program, e.g. ``path('sssp')``."""
+    p = _HERE / f"{name}.sp"
+    if not p.exists():
+        raise KeyError(f"no such DSL program: {name!r} "
+                       f"(have {', '.join(PROGRAMS)})")
+    return str(p)

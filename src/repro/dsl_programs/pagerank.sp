@@ -1,0 +1,82 @@
+// Dynamic PageRank — the paper's appendix Fig. 20 in the StarPlat-Dynamic
+// appendix syntax.  staticPR is the pull-based power iteration with the
+// L1 convergence test; recomputePR is the same iteration restricted to
+// the `modified` (affected) vertices; DynPR marks the endpoints of each
+// update batch, BFS-spreads the mark to everything reachable
+// (propagateNodeFlags — the paper's affected-subgraph detection), and
+// re-iterates only there.
+
+Static staticPR(Graph g, float beta, float delta, int maxIter,
+                propNode<float> pageRank) {
+  propNode<float> pageRank_nxt;
+  float num_nodes = g.num_nodes();
+  g.attachNodeProperty(pageRank = 1.0 / num_nodes, pageRank_nxt = 0.0);
+  int iterCount = 0;
+  float diff = 0.0;
+  do {
+    diff = 0;
+    forall (v in g.nodes()) {
+      float sum = 0.0;
+      for (nbr in g.nodes_to(v)) {
+        sum = sum + nbr.pageRank / g.count_outNbrs(nbr);
+      }
+      float val = (1 - delta) / num_nodes + delta * sum;
+      diff = diff + abs(val - v.pageRank);
+      v.pageRank_nxt = val;
+    }
+    pageRank = pageRank_nxt;
+    iterCount = iterCount + 1;
+  } while ((diff > beta) && (iterCount < maxIter));
+}
+
+// Same power iteration, gated to the affected set: only modified
+// vertices recompute their rank (their in-neighbors' ranks are read
+// whether modified or not), so the L1 test runs over the affected set.
+Incremental recomputePR(Graph g, float beta, float delta, int maxIter,
+                        propNode<float> pageRank,
+                        propNode<bool> modified) {
+  float num_nodes = g.num_nodes();
+  int iterCount = 0;
+  float diff = 0.0;
+  do {
+    diff = 0;
+    forall (v in g.nodes().filter(modified == True)) {
+      float sum = 0.0;
+      for (nbr in g.nodes_to(v)) {
+        sum = sum + nbr.pageRank / g.count_outNbrs(nbr);
+      }
+      float val = (1 - delta) / num_nodes + delta * sum;
+      diff = diff + abs(val - v.pageRank);
+      v.pageRank = val;
+    }
+    iterCount = iterCount + 1;
+  } while ((diff > beta) && (iterCount < maxIter));
+}
+
+Dynamic DynPR(Graph g, updates<g> updateBatch, int batchSize, float beta,
+              float delta, int maxIter, propNode<float> pageRank) {
+  propNode<bool> modified;
+  staticPR(g, beta, delta, maxIter, pageRank);
+  Batch(updateBatch : batchSize) {
+    g.attachNodeProperty(modified = False);
+    OnDelete(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      s.modified = True;       // source out-degree changes: its whole
+      d.modified = True;       // contribution shifts, not just this edge
+    }
+    g.propagateNodeFlags(modified);
+    g.updateCSRDel(updateBatch);
+    recomputePR(g, beta, delta, maxIter, pageRank, modified);
+    g.attachNodeProperty(modified = False);
+    OnAdd(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      s.modified = True;
+      d.modified = True;
+    }
+    g.propagateNodeFlags(modified);
+    g.updateCSRAdd(updateBatch);
+    recomputePR(g, beta, delta, maxIter, pageRank, modified);
+  }
+}

@@ -1,0 +1,104 @@
+// Dynamic SSSP — the paper's appendix Fig. 21 in the StarPlat-Dynamic
+// appendix syntax.  staticSSSP is the Bellman-Ford-style fixedPoint over
+// the modified frontier; Incremental re-runs it from a seeded frontier;
+// Decremental invalidates the shortest-path subtree below deleted tree
+// edges (phase 1) and repairs from the surviving labels (phase 2);
+// DynSSSP is the Batch { OnDelete; updateCSRDel; Decremental; OnAdd;
+// updateCSRAdd; Incremental } driver of the paper's Fig. 3.
+
+Static staticSSSP(Graph g, node src, propNode<int> dist,
+                  propNode<int> parent, propNode<bool> modified) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(dist = INF, parent = -1, modified = False,
+                       modified_nxt = False);
+  src.dist = 0;
+  src.modified = True;
+  bool finished = False;
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.modified_nxt, nbr.parent> =
+            <Min(nbr.dist, v.dist + e.weight), True, v>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+// Re-relax from whatever frontier the caller seeded in `modified`
+// (the activeOnAdd vertices), to a fixed point.
+Incremental(Graph g, propNode<int> dist, propNode<int> parent,
+            propNode<bool> modified) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(modified_nxt = False);
+  bool finished = False;
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.modified_nxt, nbr.parent> =
+            <Min(nbr.dist, v.dist + e.weight), True, v>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Decremental(Graph g, propNode<int> dist, propNode<int> parent,
+            propNode<bool> modified) {
+  // Phase 1: chase parent pointers — every vertex whose shortest-path
+  // parent got invalidated is invalidated too, to a fixed point.
+  bool finished = False;
+  while (!finished) {
+    finished = True;
+    forall (v in g.nodes().filter(modified == False)) {
+      node par = v.parent;
+      if (par >= 0 && par.modified == True) {
+        v.dist = INF;
+        v.parent = -1;
+        v.modified = True;
+        finished = False;
+      }
+    }
+  }
+  // Phase 2: the surviving labels are valid upper bounds (deletions only
+  // lengthen paths), so re-relax seeded from every still-reachable vertex.
+  forall (v in g.nodes()) {
+    v.modified = v.dist < INF;
+  }
+  Incremental(g, dist, parent, modified);
+}
+
+Dynamic DynSSSP(Graph g, updates<g> updateBatch, int batchSize, node src,
+                propNode<int> dist, propNode<int> parent,
+                propNode<bool> modified) {
+  staticSSSP(g, src, dist, parent, modified);
+  Batch(updateBatch : batchSize) {
+    g.attachNodeProperty(modified = False);
+    OnDelete(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      if (d.parent == s) {
+        d.dist = INF;
+        d.parent = -1;
+        d.modified = True;
+      }
+    }
+    g.updateCSRDel(updateBatch);
+    Decremental(g, dist, parent, modified);
+    g.attachNodeProperty(modified = False);
+    OnAdd(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      edge e = g.get_edge(s, d);
+      if (s.dist + e.weight < d.dist) {
+        s.modified = True;
+      }
+    }
+    g.updateCSRAdd(updateBatch);
+    Incremental(g, dist, parent, modified);
+  }
+}

@@ -1,0 +1,99 @@
+// Dynamic Triangle Counting — the paper's appendix Fig. 19 in the
+// StarPlat-Dynamic appendix syntax, on a symmetrized (undirected) graph.
+// staticTC is the node-iterator count; incrementalTC/decrementalTC
+// enumerate wedges through the endpoints of flagged update edges with
+// the count1/2 + count2/4 + count3/6 multiplicity dedup (a triangle with
+// k flagged edges is discovered 2k times); DynTC subtracts the deleted
+// triangles on the pre-deletion graph, applies the batch, and adds the
+// created triangles on the post-addition graph.
+
+Static staticTC(Graph g) {
+  int triangle_count = 0;
+  forall (v in g.nodes()) {
+    forall (u in g.neighbors(v).filter(u < v)) {
+      forall (w in g.neighbors(v).filter(w > v)) {
+        if (g.is_an_edge(u, w)) {
+          triangle_count += 1;
+        }
+      }
+    }
+  }
+  return triangle_count;
+}
+
+Incremental incrementalTC(Graph g, updates<g> updateBatch,
+                          propEdge<bool> modified) {
+  int count1 = 0;
+  int count2 = 0;
+  int count3 = 0;
+  forall (u in updateBatch.currentBatch(1)) {
+    node v1 = u.source;
+    node v2 = u.destination;
+    forall (v3 in g.neighbors(v1).filter(v3 != v1 && v3 != v2)) {
+      if (g.is_an_edge(v2, v3)) {
+        edge e1 = g.get_edge(v1, v3);
+        edge e2 = g.get_edge(v2, v3);
+        int numNew = 1;
+        if (e1.modified == True) { numNew = numNew + 1; }
+        if (e2.modified == True) { numNew = numNew + 1; }
+        if (numNew == 1) { count1 += 1; }
+        if (numNew == 2) { count2 += 1; }
+        if (numNew == 3) { count3 += 1; }
+      }
+    }
+  }
+  return count1 / 2 + count2 / 4 + count3 / 6;
+}
+
+Decremental decrementalTC(Graph g, updates<g> updateBatch,
+                          propEdge<bool> modified) {
+  int count1 = 0;
+  int count2 = 0;
+  int count3 = 0;
+  forall (u in updateBatch.currentBatch(0)) {
+    node v1 = u.source;
+    node v2 = u.destination;
+    forall (v3 in g.neighbors(v1).filter(v3 != v1 && v3 != v2)) {
+      if (g.is_an_edge(v2, v3)) {
+        edge e1 = g.get_edge(v1, v3);
+        edge e2 = g.get_edge(v2, v3);
+        int numNew = 1;
+        if (e1.modified == True) { numNew = numNew + 1; }
+        if (e2.modified == True) { numNew = numNew + 1; }
+        if (numNew == 1) { count1 += 1; }
+        if (numNew == 2) { count2 += 1; }
+        if (numNew == 3) { count3 += 1; }
+      }
+    }
+  }
+  return count1 / 2 + count2 / 4 + count3 / 6;
+}
+
+Dynamic DynTC(Graph g, updates<g> updateBatch, int batchSize) {
+  propEdge<bool> modified_add;
+  propEdge<bool> modified_del;
+  int triangle_count = staticTC(g);
+  Batch(updateBatch : batchSize) {
+    g.attachEdgeProperty(modified_del = False);
+    OnDelete(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      edge e = g.get_edge(s, d);
+      e.modified_del = True;
+    }
+    triangle_count = triangle_count -
+        decrementalTC(g, updateBatch, modified_del);
+    g.updateCSRDel(updateBatch);
+    g.updateCSRAdd(updateBatch);
+    g.attachEdgeProperty(modified_add = False);
+    OnAdd(u in updateBatch.currentBatch()) : {
+      node s = u.source;
+      node d = u.destination;
+      edge e = g.get_edge(s, d);
+      e.modified_add = True;
+    }
+    triangle_count = triangle_count +
+        incrementalTC(g, updateBatch, modified_add);
+  }
+  return triangle_count;
+}

@@ -1,0 +1,304 @@
+"""Cross-backend conformance harness — the paper's Table-level evaluation
+turned into an executable, seedable test matrix.
+
+A :class:`Scenario` fixes (graph, update stream, batch size); the
+``assert_*`` runners drive a compiled ``src/repro/dsl_programs/*.sp``
+program through the full lexer→parser→analysis→codegen pipeline on a
+chosen engine and require a three-way agreement:
+
+    DSL-compiled output  ==  repro.algos.oracles (from-scratch numpy)
+                         ==  hand-staged repro.algos.{sssp,pagerank,triangles}
+
+Scenarios deliberately cover the degenerate shapes the paper's
+evaluation never exercises: the empty graph, self-loops, duplicate
+edges inside one batch, deletes of absent edges, delete-then-re-add
+streams (same batch and across batches), and batch sizes 1 / 8 / 64.
+
+Every future engine or kernel PR must keep this matrix green; to add an
+algorithm, compile its ``.sp`` program, add an ``assert_<algo>`` runner
+against its oracle, and register scenarios below (see ROADMAP.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.graph import build_csr, random_updates
+from repro.graph.updates import UpdateStream
+from repro.core.dsl import compile_source
+from repro.dsl_programs import path as program_path
+from repro.algos import oracles
+from repro.algos import sssp as hand_sssp
+from repro.algos import pagerank as hand_pr
+from repro.algos import triangles as hand_tc
+
+
+@functools.lru_cache(maxsize=None)
+def program(name: str):
+    """Compile (and cache) one of the shipped .sp programs."""
+    return compile_source(program_path(name))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    n: int
+    edges: np.ndarray          # canonical (deduped, sorted) base edge set
+    w: np.ndarray
+    stream: UpdateStream
+    batch_size: int
+    src: int = 0
+    diff_capacity: int = 64
+
+
+def _canonical(n, edges, w=None):
+    """Dedup/sort through build_csr so scenario base == engine base."""
+    csr = build_csr(n, edges, w)
+    e = np.stack([np.asarray(csr.src), np.asarray(csr.dst)], 1) \
+        .astype(np.int64)
+    return csr, e, np.asarray(csr.w)
+
+
+def _digraph(n, deg, seed, max_w=50, self_loops=False):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(n * deg, 2)).astype(np.int64)
+    if not self_loops:
+        edges = edges[edges[:, 0] != edges[:, 1]]
+    w = rng.integers(1, max_w, size=edges.shape[0]).astype(np.int32)
+    return _canonical(n, edges, w)
+
+
+def _symgraph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    e, w = oracles.symmetrize(e, np.ones(len(e), np.int32))
+    return _canonical(n, e, w)
+
+
+def _sym_pairs(rows):
+    """[(u, v, w), ...] → adds array with both directions adjacent."""
+    out = []
+    for u, v, w in rows:
+        out.append((u, v, w))
+        out.append((v, u, w))
+    return np.asarray(out, np.int32).reshape(-1, 3)
+
+
+def _sym_del_pairs(rows):
+    out = []
+    for u, v in rows:
+        out.append((u, v))
+        out.append((v, u))
+    return np.asarray(out, np.int32).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Directed scenarios (SSSP, PageRank)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def digraph_scenario(name: str) -> Scenario:
+    if name == "batch1":
+        # every update is its own batch
+        _, e, w = _digraph(n=20, deg=3, seed=5)
+        ups = random_updates(build_csr(20, e, w), percent=12, seed=9)
+        return Scenario(name, 20, e, w, ups, batch_size=1)
+    if name == "batch8":
+        _, e, w = _digraph(n=32, deg=4, seed=3)
+        ups = random_updates(build_csr(32, e, w), percent=15, seed=2)
+        return Scenario(name, 32, e, w, ups, batch_size=8)
+    if name == "batch64":
+        # the whole Δ lands in a single batch
+        _, e, w = _digraph(n=32, deg=4, seed=7)
+        ups = random_updates(build_csr(32, e, w), percent=25, seed=4)
+        return Scenario(name, 32, e, w, ups, batch_size=64)
+    if name == "empty":
+        # no base edges at all; adds grow a graph; one del hits nothing
+        n = 10
+        e = np.zeros((0, 2), np.int64)
+        w = np.zeros((0,), np.int32)
+        adds = np.asarray([(0, 1, 3), (1, 2, 4), (2, 3, 1), (0, 3, 9),
+                           (3, 4, 2), (4, 5, 7)], np.int32)
+        dels = np.asarray([(5, 6)], np.int32)     # absent edge: no-op
+        return Scenario(name, n, e, w, UpdateStream(adds=adds, dels=dels),
+                        batch_size=4, diff_capacity=16)
+    if name == "self_loops":
+        _, e, w = _digraph(n=24, deg=3, seed=11, self_loops=True)
+        assert (e[:, 0] == e[:, 1]).any(), "scenario needs self-loops"
+        ups = random_updates(build_csr(24, e, w), percent=15, seed=6)
+        return Scenario(name, 24, e, w, ups, batch_size=8)
+    if name == "dup_in_batch":
+        # the same add / del repeated inside one batch (same weight)
+        _, e, w = _digraph(n=24, deg=3, seed=13)
+        e0 = (int(e[0, 0]), int(e[0, 1]))
+        f1 = _fresh_edge(24, e, seed=1)
+        f2 = _fresh_edge(
+            24, np.concatenate([e, np.asarray([f1], np.int64)]), seed=2)
+        adds = np.asarray([f1 + (9,), f1 + (9,), f2 + (5,)], np.int32)
+        dels = np.asarray([e0, e0, (int(e[3, 0]), int(e[3, 1]))], np.int32)
+        return Scenario(name, 24, e, w, UpdateStream(adds=adds, dels=dels),
+                        batch_size=8)
+    if name == "del_then_readd":
+        # e0 deleted+re-added in one batch; e1 deleted in batch 0 and
+        # re-added (new weight) in batch 2 — exercises tombstone revival
+        _, e, w = _digraph(n=24, deg=3, seed=17)
+        e0 = (int(e[0, 0]), int(e[0, 1]))
+        e1 = (int(e[5, 0]), int(e[5, 1]))
+        adds = np.asarray([e0 + (4,),
+                           _fresh_edge(24, e, seed=3) + (6,),
+                           e1 + (2,)], np.int32)
+        dels = np.asarray([e0, e1], np.int32)
+        return Scenario(name, 24, e, w, UpdateStream(adds=adds, dels=dels),
+                        batch_size=1)
+    raise KeyError(name)
+
+
+def _fresh_edge(n, edges, seed):
+    existing = set(map(tuple, edges.tolist()))
+    rng = np.random.default_rng(seed)
+    while True:
+        u, v = (int(x) for x in rng.integers(0, n, size=2))
+        if u != v and (u, v) not in existing:
+            return (u, v)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric scenarios (Triangle Counting) — paired directions must share
+# a batch, so batch sizes are even
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def sym_scenario(name: str) -> Scenario:
+    if name == "sym_batch2":
+        _, e, w = _symgraph(n=18, m=70, seed=0)
+        return Scenario(name, 18, e, w, _rand_sym_stream(18, e, k=4, seed=5),
+                        batch_size=2, diff_capacity=64)
+    if name == "sym_batch16":
+        _, e, w = _symgraph(n=24, m=110, seed=4)
+        return Scenario(name, 24, e, w, _rand_sym_stream(24, e, k=8, seed=7),
+                        batch_size=16, diff_capacity=128)
+    if name == "sym_empty":
+        # grow two triangles sharing edge (0,1) out of nothing
+        n = 8
+        e = np.zeros((0, 2), np.int64)
+        w = np.zeros((0,), np.int32)
+        adds = _sym_pairs([(0, 1, 1), (1, 2, 1), (0, 2, 1),
+                           (1, 3, 1), (0, 3, 1)])
+        dels = np.zeros((0, 2), np.int32)
+        return Scenario(name, n, e, w, UpdateStream(adds=adds, dels=dels),
+                        batch_size=4, diff_capacity=32)
+    if name == "sym_del_readd":
+        # delete a triangle edge (pair) in batch 0, re-add it in batch 1
+        _, e, w = _symgraph(n=16, m=60, seed=9)
+        u, v = int(e[0, 0]), int(e[0, 1])
+        filler = _fresh_sym_pair(16, e, seed=2)
+        adds = np.concatenate([_sym_pairs([filler + (1,)]),
+                               _sym_pairs([(u, v, 1)])])
+        dels = _sym_del_pairs([(u, v)])
+        return Scenario(name, 16, e, w, UpdateStream(adds=adds, dels=dels),
+                        batch_size=2, diff_capacity=64)
+    raise KeyError(name)
+
+
+def _rand_sym_stream(n, edges, k, seed):
+    """k deleted pairs (sampled from base) + k fresh added pairs."""
+    rng = np.random.default_rng(seed)
+    half = edges[edges[:, 0] < edges[:, 1]]
+    del_rows = half[rng.choice(len(half), size=min(k, len(half)),
+                               replace=False)]
+    existing = set(map(tuple, edges.tolist()))
+    add_rows = []
+    while len(add_rows) < k:
+        u, v = (int(x) for x in rng.integers(0, n, size=2))
+        if u != v and (u, v) not in existing:
+            add_rows.append((u, v, 1))
+            existing.add((u, v))
+            existing.add((v, u))
+    return UpdateStream(adds=_sym_pairs(add_rows),
+                        dels=_sym_del_pairs(del_rows.tolist()))
+
+
+def _fresh_sym_pair(n, edges, seed):
+    existing = set(map(tuple, edges.tolist()))
+    rng = np.random.default_rng(seed)
+    while True:
+        u, v = (int(x) for x in rng.integers(0, n, size=2))
+        if u != v and (u, v) not in existing:
+            return (u, v)
+
+
+# ---------------------------------------------------------------------------
+# Differential runners: DSL == oracle == hand-staged
+# ---------------------------------------------------------------------------
+
+def assert_sssp(engine_cls, sc: Scenario):
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    res = program("sssp").run(
+        "DynSSSP", engine_cls(), csr,
+        args={"updateBatch": sc.stream, "batchSize": sc.batch_size,
+              "src": sc.src},
+        diff_capacity=sc.diff_capacity)
+    e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                         sc.stream.adds, sc.stream.dels)
+    ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
+    got = np.minimum(res.props["dist"].astype(np.int64), oracles.INF)
+    np.testing.assert_array_equal(
+        got, ref, err_msg=f"[{sc.name}] DSL DynSSSP != oracle")
+
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, props = hand_sssp.dyn_sssp(eng, g, sc.src, sc.stream, sc.batch_size)
+    hand = np.minimum(np.asarray(props["dist"])[: sc.n].astype(np.int64),
+                      oracles.INF)
+    np.testing.assert_array_equal(
+        hand, ref, err_msg=f"[{sc.name}] hand-staged dyn_sssp != oracle")
+
+
+def assert_pagerank(engine_cls, sc: Scenario, beta=1e-4, delta=0.85,
+                    max_iter=100, rtol=5e-2, atol=1e-4):
+    # beta is tighter than the paper's 1e-3 so per-batch convergence
+    # slack (≈ beta/(1-delta) per recompute) stays well inside rtol even
+    # for batchSize=1 streams.
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    res = program("pagerank").run(
+        "DynPR", engine_cls(), csr,
+        args={"updateBatch": sc.stream, "batchSize": sc.batch_size,
+              "beta": beta, "delta": delta, "maxIter": max_iter},
+        diff_capacity=sc.diff_capacity)
+    e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                        sc.stream.adds, sc.stream.dels)
+    ref = oracles.pagerank_oracle(sc.n, e2, beta=beta, delta=delta,
+                                  max_iter=max_iter)
+    np.testing.assert_allclose(
+        res.props["pageRank"], ref, rtol=rtol, atol=atol,
+        err_msg=f"[{sc.name}] DSL DynPR != oracle")
+
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, props = hand_pr.dyn_pr(eng, g, sc.stream, sc.batch_size, beta=beta,
+                              delta=delta, max_iter=max_iter)
+    np.testing.assert_allclose(
+        np.asarray(props["pr"])[: sc.n], ref, rtol=rtol, atol=atol,
+        err_msg=f"[{sc.name}] hand-staged dyn_pr != oracle")
+
+
+def assert_tc(engine_cls, sc: Scenario):
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    res = program("tc").run(
+        "DynTC", engine_cls(), csr,
+        args={"updateBatch": sc.stream, "batchSize": sc.batch_size},
+        diff_capacity=sc.diff_capacity)
+    e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                        sc.stream.adds, sc.stream.dels)
+    ref = oracles.tc_oracle(sc.n, e2)
+    assert int(res.value) == ref, \
+        f"[{sc.name}] DSL DynTC {int(res.value)} != oracle {ref}"
+
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, count = hand_tc.dyn_tc(eng, g, sc.stream, sc.batch_size)
+    assert int(count) == ref, \
+        f"[{sc.name}] hand-staged dyn_tc {int(count)} != oracle {ref}"

@@ -21,7 +21,11 @@ from repro.core.pallas_engine import PallasEngine
 from repro.core.frontier_engine import FrontierEngine
 from repro.algos import sssp, pagerank, triangles, oracles
 
-ENGINES = [JnpEngine, DistEngine, PallasEngine, FrontierEngine]
+# shard_map tracing makes the dist cells ~2min each on CPU; they run in
+# the full lane, while conformance keeps a fast dist cell per program.
+ENGINES = [JnpEngine,
+           pytest.param(DistEngine, marks=pytest.mark.slow),
+           PallasEngine, FrontierEngine]
 
 
 @pytest.mark.parametrize("engine_cls", ENGINES, ids=lambda c: c.name)
@@ -99,6 +103,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_dist_8_virtual_devices(tmp_path):
     import pathlib
     here = pathlib.Path(__file__).resolve()

@@ -1,0 +1,59 @@
+"""The cross-backend conformance matrix: every (program × engine ×
+scenario) cell must satisfy DSL == oracle == hand-staged (see
+conformance.py).  This is the executable form of the paper's evaluation
+tables; new engines/kernels must keep it green.
+
+The dist column pays a large shard_map tracing cost per case (~1 min on
+CPU), so only one representative dist cell per program stays in the
+fast lane; the rest carry the `slow` marker and run in the full lane.
+"""
+import pytest
+
+from conformance import (assert_pagerank, assert_sssp, assert_tc,
+                         digraph_scenario, sym_scenario)
+from repro.core.engine import JnpEngine
+from repro.core.dist import DistEngine
+from repro.core.pallas_engine import PallasEngine
+
+ENGINES = [JnpEngine, DistEngine, PallasEngine]
+
+SSSP_SCENARIOS = ["batch1", "batch8", "batch64", "empty", "self_loops",
+                  "dup_in_batch", "del_then_readd"]
+PR_SCENARIOS = ["batch1", "batch8", "batch64", "del_then_readd"]
+TC_SCENARIOS = ["sym_batch2", "sym_batch16", "sym_empty", "sym_del_readd"]
+
+# the dist cell that stays fast: a single whole-Δ batch (fewest traces)
+DIST_FAST = {"batch64"}
+
+
+def _cells(scenarios, engines):
+    out = []
+    for s in scenarios:
+        for e in engines:
+            marks = ()
+            if e is DistEngine and s not in DIST_FAST:
+                marks = (pytest.mark.slow,)
+            out.append(pytest.param(s, e, marks=marks,
+                                    id=f"{s}-{e.name}"))
+    return out
+
+
+@pytest.mark.parametrize("scenario,engine_cls", _cells(SSSP_SCENARIOS,
+                                                       ENGINES))
+def test_conformance_sssp(scenario, engine_cls):
+    assert_sssp(engine_cls, digraph_scenario(scenario))
+
+
+@pytest.mark.parametrize("scenario,engine_cls", _cells(PR_SCENARIOS,
+                                                       ENGINES))
+def test_conformance_pagerank(scenario, engine_cls):
+    assert_pagerank(engine_cls, digraph_scenario(scenario))
+
+
+# TC's wedge enumeration on the dist backend is the paper's admitted MPI
+# bottleneck; the two fast engines cover the kernel surface here while
+# test_backends.py keeps one dist TC case.
+@pytest.mark.parametrize("scenario,engine_cls",
+                         _cells(TC_SCENARIOS, [JnpEngine, PallasEngine]))
+def test_conformance_tc(scenario, engine_cls):
+    assert_tc(engine_cls, sym_scenario(scenario))

@@ -10,7 +10,7 @@ import pytest
 from conftest import random_digraph, random_symgraph, sym_stream
 from repro.graph import random_updates
 from repro.core.dsl import (compile_source, parse, tokenize, analyze,
-                            ParseError)
+                            LexError, ParseError, SemanticError)
 from repro.core.dsl import ast_nodes as A
 from repro.core.dsl.emit import emit_report
 from repro.core.engine import JnpEngine
@@ -61,6 +61,54 @@ def test_parser_multiassign_and_min():
 def test_parser_rejects_arity_mismatch():
     with pytest.raises(ParseError):
         parse("Static f(Graph g) { <a.x, a.y> = <1>; }")
+
+
+@pytest.mark.parametrize("src,err", [
+    # lexer: characters outside the token alphabet
+    ("Static f(Graph g) { int x = 3 @ 4; }", LexError),
+    ("Static f(Graph g) { int q = `; }", LexError),
+    # parser: malformed forall / multi-assign / missing terminator
+    ("Static f(Graph g) { forall (v in ) { } }", ParseError),
+    ("Static f(Graph g) { forall (v g.nodes()) { } }", ParseError),
+    ("Static f(Graph g) { <a.x> = <1, 2>; }", ParseError),
+    ("Static f(Graph g) { <a.x, a.y> = <1>; }", ParseError),
+    ("Static f(Graph g) { int x = 1 }", ParseError),
+    # semantic analysis: undeclared properties, undeclared names,
+    # read-before-write — analysis failure rejects the program
+    ("Static f(Graph g, propNode<int> dist) {\n"
+     "  forall (v in g.nodes()) { v.distt = 0; } }", SemanticError),
+    ("Static f(Graph g) {\n"
+     "  forall (v in g.nodes()) { int y = v.missing + 1; } }",
+     SemanticError),
+    ("Static f(Graph g) { int y = z + 1; }", SemanticError),
+    ("Static f(Graph g) { int x; int y = x + 1; }", SemanticError),
+    ("Static f(Graph g) { float d; d += 1.0; }", SemanticError),
+    ("Static f(Graph g) { int x; bool c = True;\n"
+     "  if (c) { x = 1; } int y = x; }", SemanticError),
+    ("Static f(Graph g) { int x; bool c = True;\n"
+     "  while (c) { x = 1; } int y = x; }", SemanticError),
+], ids=["lex-at", "lex-backtick", "forall-empty-iter", "forall-no-in",
+        "multiassign-1v2", "multiassign-2v1", "missing-semicolon",
+        "undeclared-prop-write", "undeclared-prop-read", "undeclared-name",
+        "read-before-write", "accum-before-write",
+        "one-branch-init", "zero-iteration-loop-init"])
+def test_frontend_error_paths(src, err):
+    """LexError / ParseError / SemanticError each fire on the malformed
+    program and carry a line number in the message."""
+    with pytest.raises(err):
+        compile_source(src)
+
+
+@pytest.mark.parametrize("src", [
+    # a do-while body runs before its condition is first evaluated
+    "Static f(Graph g) { int i; do { i = 0; i = i + 1; } "
+    "while (i < 3); }",
+    # assigned on both branches → initialized afterwards
+    "Static f(Graph g) { int x; bool c = True;\n"
+    "  if (c) { x = 1; } else { x = 2; } int y = x; }",
+], ids=["dowhile-body-initializes", "both-branches-initialize"])
+def test_init_order_accepts_valid_paths(src):
+    compile_source(src)        # must not raise
 
 
 def test_analysis_race_inference():

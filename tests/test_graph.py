@@ -6,7 +6,7 @@ a python dict-of-sets model of the same edge multiset.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graph import (build_csr, from_csr, update_csr_add, update_csr_del,
                          merge, is_edge, edge_weight)

@@ -25,6 +25,7 @@ def make_batch(cfg, B, S, key):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_and_decode_smoke(arch):
     cfg = get_reduced(arch)
@@ -52,6 +53,7 @@ def test_train_and_decode_smoke(arch):
     assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-20b", "gemma2-9b",
                                   "qwen1.5-32b", "starcoder2-7b"])
 def test_prefill_decode_consistency(arch):

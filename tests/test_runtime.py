@@ -61,6 +61,7 @@ def test_pipeline_determinism_and_sharding():
     assert not np.array_equal(h0["tokens"], h1["tokens"])
 
 
+@pytest.mark.slow
 def test_train_resume_equality(tmp_path):
     """Resumed training must produce bit-identical parameters — the
     checkpoint/restart contract at cluster scale."""
@@ -92,6 +93,7 @@ def test_train_resume_equality(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_elastic_restart(tmp_path):
     from repro.launch.train import train, parser
     from repro.launch.elastic import run_elastic

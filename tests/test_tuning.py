@@ -1,6 +1,7 @@
 """§Perf tuning knobs: the optimized lowerings must be numerically
 equivalent to the baselines (the whole point — same math, cheaper wires)."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -27,6 +28,7 @@ def test_moe_dispatch_equivalence():
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_decode_equal_under_both_cache_shardings():
     """serve_step logits identical for 'seq' and 'dh' cache sharding
     (single host device: constraints are placement-only, math must
@@ -46,6 +48,7 @@ def test_decode_equal_under_both_cache_shardings():
                                atol=1e-6)
 
 
+@pytest.mark.slow
 def test_train_step_equal_under_dispatch():
     """One reduced MoE train step: loss equal under both dispatches."""
     cfg = get_reduced("llama4-maverick-400b-a17b")
