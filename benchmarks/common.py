@@ -1,3 +1,4 @@
+import json
 import sys
 import pathlib
 import time
@@ -6,6 +7,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# rows accumulated by emit() since the last reset_results(); run.py
+# flushes them to BENCH_<suite>.json so successive PRs can track the
+# perf trajectory in machine-readable form.
+_RESULTS: list = []
 
 
 def timeit(fn, *args, warmup=1, iters=3):
@@ -28,6 +36,32 @@ def timeit(fn, *args, warmup=1, iters=3):
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    row = {"name": name, "us_per_call": round(us, 1)}
+    for kv in derived.split(";"):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            try:
+                row[k] = float(v)
+            except ValueError:
+                row[k] = v
+    _RESULTS.append(row)
+
+
+def reset_results() -> None:
+    _RESULTS.clear()
+
+
+def write_json(suite: str, meta: dict | None = None) -> pathlib.Path:
+    """Flush the emit() rows to BENCH_<suite>.json at the repo root."""
+    payload = {"suite": suite,
+               "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+               "results": list(_RESULTS)}
+    if meta:
+        payload["meta"] = meta
+    path = REPO_ROOT / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[bench] wrote {path}", flush=True)
+    return path
 
 
 def bench_graphs(small=False):

@@ -48,6 +48,10 @@ def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
                     return sssp.dyn_sssp(eng, g0, 0, ups, batch,
                                          props=props0)[1]["dist"]
 
+                def dyn_stream():
+                    return sssp.dyn_sssp_stream(eng, g0, 0, ups, batch,
+                                                props=props0)[1]["dist"]
+
                 def stat():
                     g1 = eng.prepare(csr, diff_capacity=cap)
                     b = ups.batch(0, max(ups.num_adds, ups.num_dels, 1))
@@ -56,9 +60,13 @@ def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
                     return sssp.static_sssp(eng, g1, 0)["dist"]
 
                 t_dyn = timeit(dyn, iters=2)
+                t_stream = timeit(dyn_stream, iters=2)
                 t_stat = timeit(stat, iters=2)
                 emit(f"sssp/{ename}/{gname}/pct{pct}/dynamic", t_dyn,
                      f"speedup_vs_static={t_stat / max(t_dyn, 1):.2f}")
+                emit(f"sssp/{ename}/{gname}/pct{pct}/dynamic_stream",
+                     t_stream,
+                     f"speedup_vs_static={t_stat / max(t_stream, 1):.2f}")
                 emit(f"sssp/{ename}/{gname}/pct{pct}/static", t_stat, "")
 
                 # ---- PageRank ----
@@ -68,6 +76,10 @@ def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
                     return pagerank.dyn_pr(eng, g0, ups, batch,
                                            props=pr0)[1]["pr"]
 
+                def dyn_pr_stream():
+                    return pagerank.dyn_pr_stream(eng, g0, ups, batch,
+                                                  props=pr0)[1]["pr"]
+
                 def stat_pr():
                     g1 = eng.prepare(csr, diff_capacity=cap)
                     b = ups.batch(0, max(ups.num_adds, ups.num_dels, 1))
@@ -76,9 +88,12 @@ def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
                     return pagerank.static_pr(eng, g1)["pr"]
 
                 t_dyn = timeit(dyn_pr, iters=2)
+                t_stream = timeit(dyn_pr_stream, iters=2)
                 t_stat = timeit(stat_pr, iters=2)
                 emit(f"pr/{ename}/{gname}/pct{pct}/dynamic", t_dyn,
                      f"speedup_vs_static={t_stat / max(t_dyn, 1):.2f}")
+                emit(f"pr/{ename}/{gname}/pct{pct}/dynamic_stream", t_stream,
+                     f"speedup_vs_static={t_stat / max(t_stream, 1):.2f}")
                 emit(f"pr/{ename}/{gname}/pct{pct}/static", t_stat, "")
 
 

@@ -1,13 +1,17 @@
 """Benchmark orchestrator — one suite per paper table/figure.
 
   dynamic_vs_static   paper Tables 2–4 / Figs 10–18 (dyn vs static × pct)
+  stream              streaming-executor throughput (fused scan vs
+                      per-batch dispatch; updates/sec + edges/sec)
   tc                  paper TC columns (wedge enumeration, uniform graphs)
   merge_policy        diff-CSR merge cadence ablation (paper §3.5 knob)
   scheduling          backend scheduling trade-offs (paper Table 6 analogue)
   roofline            §Roofline terms per (arch × shape × mesh) from the
                       dry-run artifacts (reads benchmarks/results/dryrun.json)
 
-CSV lines: ``name,us_per_call,derived`` on stdout.
+Output: ``name,us_per_call,derived`` CSV lines on stdout AND a
+machine-readable ``BENCH_<suite>.json`` at the repo root per suite run —
+the perf trajectory successive PRs diff against.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--suite S] [--small]
@@ -25,32 +29,51 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "dynamic_vs_static", "tc", "merge_policy",
-                             "scheduling", "static_baselines", "roofline"])
+                    choices=["all", "dynamic_vs_static", "stream", "tc",
+                             "merge_policy", "scheduling", "static_baselines",
+                             "roofline"])
     ap.add_argument("--small", action="store_true", default=True,
                     help="reduced graph sizes (CI-speed; default on CPU)")
     ap.add_argument("--full", dest="small", action="store_false",
                     help="full bench-scale graphs")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: reduced engine × percent grids")
     args = ap.parse_args()
+
+    import common
+
+    def suite(name, fn):
+        common.reset_results()
+        fn()
+        common.write_json(name, meta={"small": bool(args.small)})
 
     if args.suite in ("all", "dynamic_vs_static"):
         import dynamic_vs_static
-        dynamic_vs_static.run(small=args.small)
+        kw = dict(small=args.small)
+        if args.quick:
+            kw.update(percents=(1, 10), engines=("jnp", "pallas"))
+        suite("dynamic_vs_static", lambda: dynamic_vs_static.run(**kw))
+    if args.suite in ("all", "stream"):
+        import stream_executor
+        kw = dict(small=args.small)
+        if args.quick:
+            kw.update(engines=("jnp", "pallas"))
+        suite("stream", lambda: stream_executor.run(**kw))
     if args.suite in ("all", "tc"):
         import dynamic_vs_static
-        dynamic_vs_static.run_tc(small=True)
+        suite("tc", lambda: dynamic_vs_static.run_tc(small=True))
     if args.suite in ("all", "merge_policy"):
         import merge_policy
-        merge_policy.run()
+        suite("merge_policy", merge_policy.run)
     if args.suite in ("all", "scheduling"):
         import scheduling_ablation
-        scheduling_ablation.run(small=args.small)
+        suite("scheduling", lambda: scheduling_ablation.run(small=args.small))
     if args.suite in ("all", "static_baselines"):
         import static_baselines
-        static_baselines.run(small=True)
+        suite("static_baselines", lambda: static_baselines.run(small=True))
     if args.suite in ("all", "roofline"):
         import roofline
-        roofline.run()
+        suite("roofline", roofline.run)
 
 
 if __name__ == "__main__":

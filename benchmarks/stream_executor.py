@@ -1,0 +1,75 @@
+"""Streaming-executor throughput: fused scan vs per-batch dispatch.
+
+The tentpole quantity of the perf trajectory (ISSUE 3 / DESIGN.md §3):
+drive one ΔG update stream through dynamic SSSP twice —
+
+  batched  per-batch dispatch (the pre-existing ``dyn_sssp`` loop: one
+           host round-trip and one overflow check per batch), and
+  fused    ``Engine.run_stream``: the whole stream lax.scanned in one
+           compiled program per segment, counters read once per segment
+
+— and record updates/sec (update events applied per wall-second, the
+paper's Tables 2–4 x-axis quantity) plus edges/sec (graph edge-lanes
+streamed through the repair sweeps per wall-second).  Both rows land in
+BENCH_stream.json so successive PRs can track the fused-over-batched
+speedup; the acceptance bar is fused ≥ 2× batched updates/sec on the
+--small suite.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import timeit, emit, bench_graphs
+from repro.graph import build_csr, random_updates
+from repro.core.engine import JnpEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.core.frontier_engine import FrontierEngine
+from repro.core.dist import DistEngine
+from repro.algos import sssp
+
+ENGINES = {"jnp": JnpEngine, "pallas": PallasEngine, "dist": DistEngine,
+           "frontier": FrontierEngine}
+
+
+def run(small=True, engines=("jnp", "pallas", "frontier"),
+        percent=5, batch=16, iters=2):
+    # NB: 'dist' runs correctly but pays shard_map emulation costs on a
+    # CPU host; pass engines=(..., "dist") explicitly to include it.
+    graphs = bench_graphs(small)
+    for gname, (n, edges, w) in graphs.items():
+        keep = edges[:, 0] != edges[:, 1]
+        csr = build_csr(n, edges[keep], w[keep])
+        ups = random_updates(csr, percent=percent, seed=7)
+        nb = ups.num_batches(batch)
+        n_updates = ups.num_adds + ups.num_dels
+        # edge-lanes each repair sweep streams over, per batch
+        lanes = csr.num_edges + max(2 * ups.num_adds, 16)
+        for ename in engines:
+            eng = ENGINES[ename]()
+            cap = max(2 * ups.num_adds, 16)
+            g0 = eng.prepare(csr, diff_capacity=cap)
+            props0 = sssp.static_sssp(eng, g0, 0)
+
+            def fused():
+                return sssp.dyn_sssp_stream(
+                    eng, g0, 0, ups, batch, props=props0,
+                    segment_size=nb)[1]["dist"]
+
+            def batched():
+                return sssp.dyn_sssp(eng, g0, 0, ups, batch,
+                                     props=props0)[1]["dist"]
+
+            t_f = timeit(fused, iters=iters)
+            t_b = timeit(batched, iters=iters)
+            for mode, t in (("fused", t_f), ("batched", t_b)):
+                ups_s = n_updates / (t / 1e6)
+                edges_s = lanes * nb / (t / 1e6)
+                emit(f"stream/sssp/{ename}/{gname}/{mode}", t,
+                     f"updates_per_sec={ups_s:.0f};"
+                     f"edges_per_sec={edges_s:.0f};"
+                     f"num_updates={n_updates};num_batches={nb};"
+                     f"fused_speedup={t_b / max(t_f, 1):.2f}")
+
+
+if __name__ == "__main__":
+    run()

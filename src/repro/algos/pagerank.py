@@ -7,6 +7,8 @@ detection.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -44,7 +46,7 @@ def _iterate(engine: Engine, g, props: Props, beta: float, delta: float,
              max_iter: int) -> Props:
     sw = _pr_sweep(engine.n_real, delta)
     props = dict(props)
-    props["_absdiff"] = jnp.zeros((engine.n_pad,), F32)
+    props["_absdiff"] = engine.full(0.0, F32)
 
     def cond_fn(p, it, col):
         diff = col.sum(p["_absdiff"])
@@ -78,13 +80,14 @@ def static_pr(engine: Engine, g, beta: float = 1e-3, delta: float = 0.85,
     return _iterate(engine, g, props, beta, delta, max_iter)
 
 
-def dyn_pr(engine: Engine, g, stream: UpdateStream, batch_size: int,
-           beta: float = 1e-3, delta: float = 0.85, max_iter: int = 100,
-           props: Props | None = None):
-    if props is None:
-        props = static_pr(engine, g, beta, delta, max_iter)
+@functools.lru_cache(maxsize=None)
+def make_stream_step(beta: float = 1e-3, delta: float = 0.85,
+                     max_iter: int = 100):
+    """The per-ΔG-batch body with the PR knobs bound — jit-compatible,
+    lax.scanned by ``Engine.run_stream``.  lru_cached so repeated calls
+    with the same knobs reuse one step object (and its jitted scan)."""
 
-    for batch in stream.batches(batch_size):
+    def stream_step(engine: Engine, g, batch, props: Props):
         # Both endpoints seed the affected set: the destination's in-edge
         # set changed, and the source's out-degree changed (which rescales
         # its contribution to *all* of its out-neighbors).
@@ -113,4 +116,27 @@ def dyn_pr(engine: Engine, g, stream: UpdateStream, batch_size: int,
         g = engine.update_add(g, batch)                       # flags first,
         props = _with_degrees(engine, g, props)               # then CSR add
         props = _iterate(engine, g, props, beta, delta, max_iter)
+        return g, props
+
+    return stream_step
+
+
+def dyn_pr(engine: Engine, g, stream: UpdateStream, batch_size: int,
+           beta: float = 1e-3, delta: float = 0.85, max_iter: int = 100,
+           props: Props | None = None):
+    if props is None:
+        props = static_pr(engine, g, beta, delta, max_iter)
+    step = make_stream_step(beta, delta, max_iter)
+    for batch in stream.batches(batch_size):
+        g, props = step(engine, g, batch, props)
     return g, props
+
+
+def dyn_pr_stream(engine: Engine, g, stream: UpdateStream, batch_size: int,
+                  beta: float = 1e-3, delta: float = 0.85,
+                  max_iter: int = 100, props: Props | None = None, **kw):
+    """dyn_pr through the device-resident streaming executor."""
+    if props is None:
+        props = static_pr(engine, g, beta, delta, max_iter)
+    step = make_stream_step(beta, delta, max_iter)
+    return engine.run_stream(g, stream, batch_size, step, props, **kw)

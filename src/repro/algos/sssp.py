@@ -130,39 +130,53 @@ def decremental(engine: Engine, g, props: Props, max_iter: int = 1 << 30) -> Pro
 #                                        OnAdd; updateCSRAdd; Incremental }
 # ---------------------------------------------------------------------------
 
+def stream_step(engine: Engine, g, batch, props: Props):
+    """One ΔG batch: the paper's Fig. 3 loop body, engine-neutral and
+    jit-compatible — ``Engine.run_stream`` lax.scans this."""
+    # --- OnDelete pre-processing ------------------------------------------
+    def on_delete(p: Props) -> Props:
+        tree_edge = (p["parent"][jnp.clip(batch.del_dst, 0, engine.n_pad - 1)]
+                     == batch.del_src) & batch.del_mask
+        tgt = jnp.where(tree_edge, batch.del_dst, engine.n_pad)
+        dist = p["dist"].at[tgt].set(INF_W, mode="drop")
+        parent = p["parent"].at[tgt].set(NO_PARENT, mode="drop")
+        modified = p["modified"].at[tgt].set(True, mode="drop")
+        return {**p, "dist": dist, "parent": parent, "modified": modified}
+
+    props = {**props, "modified": jnp.zeros_like(props["modified"])}
+    props = engine.vertex_map(g, on_delete, props)
+    g = engine.update_del(g, batch)
+    props = decremental(engine, g, props)
+
+    # --- OnAdd pre-processing ----------------------------------------------
+    g = engine.update_add(g, batch)
+
+    def on_add(p: Props) -> Props:
+        src_d = p["dist"][jnp.clip(batch.add_src, 0, engine.n_pad - 1)]
+        dst_d = p["dist"][jnp.clip(batch.add_dst, 0, engine.n_pad - 1)]
+        improves = (dst_d > src_d + batch.add_w) & batch.add_mask
+        tgt = jnp.where(improves, batch.add_src, engine.n_pad)
+        modified = p["modified"].at[tgt].set(True, mode="drop")
+        return {**p, "modified": modified}
+
+    props = {**props, "modified": jnp.zeros_like(props["modified"])}
+    props = engine.vertex_map(g, on_add, props)
+    props = incremental(engine, g, props)
+    return g, props
+
+
 def dyn_sssp(engine: Engine, g, source: int, stream: UpdateStream,
              batch_size: int, props: Props | None = None):
     if props is None:
         props = static_sssp(engine, g, source)
-
     for batch in stream.batches(batch_size):
-        # --- OnDelete pre-processing --------------------------------------
-        def on_delete(p: Props) -> Props:
-            tree_edge = (p["parent"][jnp.clip(batch.del_dst, 0, engine.n_pad - 1)]
-                         == batch.del_src) & batch.del_mask
-            tgt = jnp.where(tree_edge, batch.del_dst, engine.n_pad)
-            dist = p["dist"].at[tgt].set(INF_W, mode="drop")
-            parent = p["parent"].at[tgt].set(NO_PARENT, mode="drop")
-            modified = p["modified"].at[tgt].set(True, mode="drop")
-            return {**p, "dist": dist, "parent": parent, "modified": modified}
-
-        props = {**props, "modified": jnp.zeros_like(props["modified"])}
-        props = engine.vertex_map(g, on_delete, props)
-        g = engine.update_del(g, batch)
-        props = decremental(engine, g, props)
-
-        # --- OnAdd pre-processing ------------------------------------------
-        g = engine.update_add(g, batch)
-
-        def on_add(p: Props) -> Props:
-            src_d = p["dist"][jnp.clip(batch.add_src, 0, engine.n_pad - 1)]
-            dst_d = p["dist"][jnp.clip(batch.add_dst, 0, engine.n_pad - 1)]
-            improves = (dst_d > src_d + batch.add_w) & batch.add_mask
-            tgt = jnp.where(improves, batch.add_src, engine.n_pad)
-            modified = p["modified"].at[tgt].set(True, mode="drop")
-            return {**p, "modified": modified}
-
-        props = {**props, "modified": jnp.zeros_like(props["modified"])}
-        props = engine.vertex_map(g, on_add, props)
-        props = incremental(engine, g, props)
+        g, props = stream_step(engine, g, batch, props)
     return g, props
+
+
+def dyn_sssp_stream(engine: Engine, g, source: int, stream: UpdateStream,
+                    batch_size: int, props: Props | None = None, **kw):
+    """dyn_sssp through the device-resident streaming executor."""
+    if props is None:
+        props = static_sssp(engine, g, source)
+    return engine.run_stream(g, stream, batch_size, stream_step, props, **kw)

@@ -50,23 +50,37 @@ def _delta_counts(engine: Engine, g, flag_name: str, lane_flags):
     return c1 // 2 + c2 // 4 + c3 // 6
 
 
+def stream_step(engine: Engine, g, batch, count):
+    """One ΔG batch of dynamic TC; the carry is the running count.
+    Inside ``run_stream`` the engine view supplies static wedge bounds,
+    so the enumeration never syncs to host mid-scan."""
+    # --- decremental: count on the pre-deletion graph, then delete --------
+    del_flags = engine.batch_edge_flags(g, batch.del_src, batch.del_dst,
+                                        batch.del_mask)
+    count = count - _delta_counts(engine, g, "mod", {"mod": del_flags})
+    g = engine.update_del(g, batch)
+
+    # --- incremental: add edges, flag them, count on the new graph --------
+    g = engine.update_add(g, batch)
+    add_flags = engine.batch_edge_flags(g, batch.add_src, batch.add_dst,
+                                        batch.add_mask)
+    count = count + _delta_counts(engine, g, "mod", {"mod": add_flags})
+    return g, count
+
+
 def dyn_tc(engine: Engine, g, stream: UpdateStream, batch_size: int,
            count=None):
     if count is None:
         count = static_tc(engine, g)
-
     for batch in stream.batches(batch_size):
-        # --- decremental: count on the pre-deletion graph, then delete ----
-        del_flags = engine.batch_edge_flags(g, batch.del_src, batch.del_dst,
-                                            batch.del_mask)
-        count = count - _delta_counts(engine, g, "mod",
-                                      {"mod": del_flags})
-        g = engine.update_del(g, batch)
-
-        # --- incremental: add edges, flag them, count on the new graph ----
-        g = engine.update_add(g, batch)
-        add_flags = engine.batch_edge_flags(g, batch.add_src, batch.add_dst,
-                                            batch.add_mask)
-        count = count + _delta_counts(engine, g, "mod",
-                                      {"mod": add_flags})
+        g, count = stream_step(engine, g, batch, count)
     return g, count
+
+
+def dyn_tc_stream(engine: Engine, g, stream: UpdateStream, batch_size: int,
+                  count=None, **kw):
+    """dyn_tc through the device-resident streaming executor."""
+    if count is None:
+        count = static_tc(engine, g)
+    count = jnp.asarray(count, I64)
+    return engine.run_stream(g, stream, batch_size, stream_step, count, **kw)

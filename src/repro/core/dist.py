@@ -122,6 +122,99 @@ def _pcombine(red: Reduce, x, axis: str):
     raise ValueError(red.kind)
 
 
+class _DistStreamView(Engine):
+    """In-shard engine view used by stream steps inside the streaming
+    shard_map: the same Engine surface, but every method assumes it is
+    already running on ONE shard (local DynGraph, (block,)-local vertex
+    props) and synchronizes through collectives — the paper's 'same
+    algorithm text, MPI synchronization' point carried into the fused
+    scan.  Notably has NO ``src_flags_from_dst``: decremental repair
+    falls back to its dense seed, exactly like the outer DistEngine."""
+
+    name = "dist-stream"
+
+    def __init__(self, outer: "DistEngine"):
+        self._o = outer
+
+    # -- shapes ------------------------------------------------------------
+    # _n delegates to the LIVE engine: the cached segment runner retraces
+    # when graph shapes change, and the retrace must see the n of the
+    # graph currently prepared, not the one at view construction.
+    @property
+    def _n(self):
+        return self._o._n
+
+    @property
+    def n_pad(self) -> int:
+        return self._o.n_pad
+
+    def full(self, value, dtype) -> jax.Array:
+        # vertex properties inside the stream scan are (block,) shards
+        return jnp.full((self._o.block,), value, dtype=dtype)
+
+    # -- aggregate ops -----------------------------------------------------
+    def vertex_map(self, g, fn, props: Props) -> Props:
+        ax = self._o.axis
+        blk = self._o.block
+        full = {k: jax.lax.all_gather(v, ax, tiled=True)
+                for k, v in props.items()}
+        out = fn(full)
+        i = jax.lax.axis_index(ax)
+        return {k: jax.lax.dynamic_slice(v, (i * blk,), (blk,))
+                for k, v in out.items()}
+
+    def sweep(self, g, sw: EdgeSweep, props: Props) -> Props:
+        read_set = frozenset(sw.read_set(props))
+        return self._o._sweep_local(g, sw, props, read_set)
+
+    def count_wedges(self, handle, pair_fn, lane_flags, out_example,
+                     bounds=None):
+        raise NotImplementedError(
+            "wedge enumeration (TC) is not supported inside DistEngine's "
+            "fused stream scan; use the per-batch dyn_tc path on dist")
+
+    def fixed_point(self, g, sw: EdgeSweep, props: Props, cond_fn,
+                    max_iter: int) -> Props:
+        read_set = frozenset(sw.read_set(props))
+        col = DistCollectives(self._o.axis)
+
+        def cond(state):
+            it, p = state
+            return (it < max_iter) & cond_fn(p, it, col)
+
+        def body(state):
+            it, p = state
+            return it + 1, self._o._sweep_local(g, sw, p, read_set)
+
+        _, out = jax.lax.while_loop(cond, body, (jnp.zeros((), INT), props))
+        return out
+
+    def out_degrees(self, g) -> jax.Array:
+        esrc, _, _, ealive = g.edge_arrays()
+        dense = jax.ops.segment_sum(ealive.astype(INT), esrc,
+                                    num_segments=self.n_pad)
+        dense = jax.lax.psum(dense, self._o.axis)
+        i = jax.lax.axis_index(self._o.axis)
+        return jax.lax.dynamic_slice(dense, (i * self._o.block,),
+                                     (self._o.block,))
+
+    # -- dynamic updates (ownership-masked, straight onto the local graph) --
+    def update_del(self, g, batch: UpdateBatch):
+        i = jax.lax.axis_index(self._o.axis)
+        own = (batch.del_src // self._o.block) == i
+        return diffcsr.update_csr_del(g, batch.del_src, batch.del_dst,
+                                      batch.del_mask & own)
+
+    def update_add(self, g, batch: UpdateBatch):
+        i = jax.lax.axis_index(self._o.axis)
+        own = (batch.add_src // self._o.block) == i
+        return diffcsr.update_csr_add(g, batch.add_src, batch.add_dst,
+                                      batch.add_w, batch.add_mask & own)
+
+    def batch_edge_flags(self, g, qs, qd, mask) -> jax.Array:
+        return edge_lane_flags(g, qs, qd, mask)
+
+
 class DistEngine(Engine):
     name = "dist"
 
@@ -135,6 +228,7 @@ class DistEngine(Engine):
         self.mesh = Mesh(np.array(devices[: self.P]), (axis,))
         self._n = None
         self._block = None
+        self._stream_cache = {}
 
     # ------------------------------------------------------------------ #
     @property
@@ -200,7 +294,8 @@ class DistEngine(Engine):
         sh = NamedSharding(self.mesh, P(self.axis))
         return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), dg)
 
-    def merge(self, dg: DistGraph) -> DistGraph:
+    def merge(self, dg: DistGraph,
+              diff_capacity: int | None = None) -> DistGraph:
         """Gather alive edges host-side, rebuild, re-partition."""
         n = dg.n
         srcs, dsts, ws = [], [], []
@@ -218,7 +313,74 @@ class DistEngine(Engine):
             srcs.append(es[keep]); dsts.append(ed[keep]); ws.append(ew[keep])
         edges = np.stack([np.concatenate(srcs), np.concatenate(dsts)], 1)
         csr = build_csr(n, edges, np.concatenate(ws))
-        return self.prepare(csr, diff_capacity=max(dg.d_src.shape[1], 1))
+        if diff_capacity is None:
+            diff_capacity = max(dg.d_src.shape[1], 1)
+        return self.prepare(csr, diff_capacity=diff_capacity)
+
+    # -- streaming executor hooks ------------------------------------------
+    def handle_counters(self, dg: DistGraph) -> jax.Array:
+        """(overflow, used, dead): overflow summed over shards, pool
+        occupancy as the worst shard (capacity is per shard)."""
+        mat = dg.d_src < dg.n
+        used = jnp.max(jnp.sum(mat.astype(INT), axis=1))
+        dead = jnp.max(jnp.sum((mat & ~dg.d_alive).astype(INT), axis=1))
+        return jnp.stack([jnp.sum(dg.overflow), used, dead])
+
+    def grow(self, dg: DistGraph, factor: float = 2.0) -> DistGraph:
+        cap = dg.d_src.shape[1]
+        return self.merge(dg, diff_capacity=max(int(cap * factor), cap + 16))
+
+    def compact_handle(self, dg: DistGraph) -> DistGraph:
+        def fn(dgl):
+            return _restack(diffcsr.compact(_local(dgl)))
+        return self._shmap(fn, in_specs=(self._gspec(),),
+                           out_specs=self._gspec())(dg)
+
+    def _diff_capacity(self, dg: DistGraph) -> int:
+        return int(dg.d_src.shape[1])
+
+    def _segment_runner(self, step_fn, dg: DistGraph):
+        fn = self._stream_cache.get(step_fn)
+        if fn is None:
+            view = _DistStreamView(self)
+            ax = self.axis
+
+            def seg_run(dgl, c0, batches):
+                g = _local(dgl)
+
+                def body(state, batch):
+                    g, c = step_fn(view, state[0], batch, state[1])
+                    return (g, c), None
+
+                (g, c), _ = jax.lax.scan(body, (g, c0), batches)
+                # reduce the per-shard counters to the driver's triple:
+                # overflow summed, occupancy as the worst shard
+                cnt = diffcsr.pool_counters(g)
+                cnt = jnp.stack([jax.lax.psum(cnt[0], ax),
+                                 jax.lax.pmax(cnt[1], ax),
+                                 jax.lax.pmax(cnt[2], ax)])
+                return _restack(g), c, cnt[None]
+
+            shmapped = jax.jit(self._shmap(
+                seg_run,
+                in_specs=(self._gspec(), self._pspec(), P()),
+                out_specs=(self._gspec(), self._pspec(), P(self.axis))))
+
+            def fn(dg, carry, stacked):
+                dg, carry, counters = shmapped(dg, carry, stacked)
+                return dg, carry, counters[0]
+
+            self._stream_cache[step_fn] = fn
+        return fn
+
+    def run_stream(self, dg: DistGraph, stream, batch_size: int, step_fn,
+                   carry, segment_size: int = 8, compact_frac: float = 0.5):
+        """Fused stream segments under ONE shard_map: the scan keeps the
+        sharded graph and (block,)-local vertex props device-resident,
+        synchronizing only through the collectives inside the step (the
+        shared driver in ``Engine._run_stream_fused``)."""
+        return self._run_stream_fused(dg, stream, batch_size, step_fn,
+                                      carry, segment_size, compact_frac)
 
     def out_degrees(self, dg: DistGraph) -> jax.Array:
         def fn(dgl):

@@ -67,6 +67,30 @@ def edge_lane_flags(g: DynGraph, qs, qd, mask=None) -> jax.Array:
     return flags
 
 
+class _StreamView:
+    """Engine facade handed to stream steps inside ``run_stream``.
+
+    Semantics are identical to the wrapped engine; the only difference is
+    that ``count_wedges`` runs with host-precomputed static degree bounds
+    (``bounds``) so wedge enumeration never syncs to host mid-scan.
+    Engines whose interactive paths are host-driven (FrontierEngine's
+    direction optimization) subclass this to swap in their jit-safe
+    lowering."""
+
+    def __init__(self, engine: "Engine", bounds=None):
+        self._engine = engine
+        self._bounds = bounds
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+    def count_wedges(self, handle, pair_fn, lane_flags, out_example,
+                     bounds=None):
+        return self._engine.count_wedges(
+            handle, pair_fn, lane_flags, out_example,
+            bounds=bounds if bounds is not None else self._bounds)
+
+
 class WedgeCtx:
     """Per-iteration context handed to wedge pair functions (TC)."""
 
@@ -128,7 +152,8 @@ class Engine:
         raise NotImplementedError
 
     def count_wedges(self, handle, pair_fn: Callable,
-                     lane_flags: Dict[str, jax.Array], out_example) -> Any:
+                     lane_flags: Dict[str, jax.Array], out_example,
+                     bounds=None) -> Any:
         raise NotImplementedError
 
     # -- dynamic updates ---------------------------------------------------
@@ -140,6 +165,111 @@ class Engine:
 
     def batch_edge_flags(self, handle, qs, qd, mask) -> jax.Array:
         raise NotImplementedError
+
+    # -- streaming executor (DESIGN.md §3) ---------------------------------
+    # A *stream step* is the engine-neutral per-batch body
+    #     step_fn(engine, handle, batch, carry) -> (handle, carry)
+    # (update → affected-seed → incremental repair).  ``run_stream`` drives
+    # a whole padded batch stream through it; engines with a fused path
+    # override it with one jitted lax.scan per stream segment, checking
+    # the diff-pool counters once per segment instead of once per batch.
+
+    def handle_graph(self, handle) -> DynGraph:
+        """The DynGraph inside an engine handle (identity for raw graphs)."""
+        return handle
+
+    def handle_counters(self, handle) -> jax.Array:
+        """(overflow, used, dead) pool counters, on device."""
+        return diffcsr.pool_counters(self.handle_graph(handle))
+
+    def grow(self, handle, factor: float = 2.0):
+        """Host-side merge with grown diff capacity — the one remaining
+        numpy exit, reserved for true pool overflow."""
+        raise NotImplementedError
+
+    def compact_handle(self, handle):
+        """Device-side reclamation of tombstoned diff slots."""
+        raise NotImplementedError
+
+    def stream_view(self, bounds=None) -> "Engine":
+        """The engine facade handed to stream steps (see _StreamView)."""
+        return _StreamView(self, bounds)
+
+    def static_wedge_bounds(self, handle):
+        """Host-static (max_main_deg, max_diff_deg) loop bounds usable
+        inside a jitted stream segment.  The main region's offsets only
+        change at merge/grow (segment boundaries), so its true max degree
+        is static within a segment; the diff region is bounded by its
+        capacity."""
+        g = self.handle_graph(handle)
+        deg = np.asarray(g.offsets[1:] - g.offsets[:-1])
+        max_main = int(deg.max()) if deg.size else 0
+        return max_main, g.diff_capacity
+
+    def _diff_capacity(self, handle) -> int:
+        return self.handle_graph(handle).diff_capacity
+
+    def _segment_runner(self, step_fn, handle):
+        """Compiled ``(handle, carry, stacked_batches) -> (handle, carry,
+        (overflow, used, dead))`` for one fused stream segment."""
+        raise NotImplementedError
+
+    def _run_stream_fused(self, handle, stream, batch_size: int, step_fn,
+                          carry, segment_size: int, compact_frac: float):
+        """Shared fused-stream driver: cut the stream into segments of
+        padded batches, run each through ``_segment_runner`` (one
+        compiled scan — no host round-trips between batches), and once
+        per segment read back the pool counters: overflow rolls the
+        segment back, grows capacity host-side (the one numpy exit) and
+        replays; heavy tombstoning triggers the on-device compact."""
+        nb = stream.num_batches(batch_size)
+        if nb == 0:
+            return handle, carry
+        seg = max(1, min(segment_size or nb, nb))
+        of0 = int(np.asarray(self.handle_counters(handle)[0]))
+        i = 0
+        while i < nb:
+            k = min(seg, nb - i)
+            stacked = stream.stacked(batch_size, i, k)
+            snap = (handle, carry)
+            run = self._segment_runner(step_fn, handle)
+            handle, carry, counters = run(handle, carry, stacked)
+            of, _used, dead = (int(x) for x in np.asarray(counters))
+            if of > of0:
+                # adds were dropped inside the segment: roll back, grow
+                # the pool, replay the segment on the larger shapes.
+                handle, carry = self.grow(snap[0]), snap[1]
+                of0 = 0
+                continue
+            of0 = of
+            if dead > compact_frac * max(self._diff_capacity(handle), 1):
+                handle = self.compact_handle(handle)
+            i += k
+        return handle, carry
+
+    def run_stream(self, handle, stream, batch_size: int, step_fn,
+                   carry, segment_size: int = 8, compact_frac: float = 0.5):
+        """Baseline per-batch dispatch: one device round-trip per batch
+        (``segment_size`` has no effect — every batch is its own
+        segment).  Fused engines override this."""
+        view = self.stream_view()
+        of0 = int(np.asarray(self.handle_counters(handle)[0]))
+        for i in range(stream.num_batches(batch_size)):
+            batch = stream.batch(i, batch_size)
+            snap = (handle, carry)
+            handle, carry = step_fn(view, handle, batch, carry)
+            while int(np.asarray(self.handle_counters(handle)[0])) > of0:
+                # adds were dropped: roll back, grow capacity, replay.
+                handle, carry = self.grow(snap[0]), snap[1]
+                of0 = 0
+                snap = (handle, carry)
+                handle, carry = step_fn(view, handle, batch, carry)
+            of, _used, dead = (int(x) for x in
+                               np.asarray(self.handle_counters(handle)))
+            of0 = of
+            if dead > compact_frac * max(self._diff_capacity(handle), 1):
+                handle = self.compact_handle(handle)
+        return handle, carry
 
     # -- library routines shared by all backends ---------------------------
     def propagate_flags(self, handle, props: Props, flag: str,
@@ -174,6 +304,12 @@ class JnpEngine(Engine):
 
     def __init__(self):
         self._n = None
+        # (array, value) pairs keyed by offsets-array identity: updates
+        # replace d_offsets (cache invalidates itself), deletions and
+        # repeated wedge calls on one handle reuse the cached bound —
+        # no per-call host sync in count_wedges.
+        self._deg_cache: Dict[str, tuple] = {}
+        self._stream_cache: Dict[Any, Callable] = {}
 
     # -- construction ------------------------------------------------------
     def prepare(self, csr: CSR, diff_capacity: int) -> DynGraph:
@@ -243,15 +379,25 @@ class JnpEngine(Engine):
     def vertex_map(self, g: DynGraph, fn: Callable, props: Props) -> Props:
         return fn(props)
 
+    def _max_deg(self, region: str, offsets: jax.Array) -> int:
+        cached = self._deg_cache.get(region)
+        if cached is None or cached[0] is not offsets:
+            deg = np.asarray(offsets[1:] - offsets[:-1])
+            cached = (offsets, int(deg.max()) if deg.size else 0)
+            self._deg_cache[region] = cached
+        return cached[1]
+
     # -- wedges (triangle counting) ----------------------------------------
     def count_wedges(self, g: DynGraph, pair_fn: Callable,
-                     lane_flags: Dict[str, jax.Array], out_example):
+                     lane_flags: Dict[str, jax.Array], out_example,
+                     bounds=None):
         esrc, edst, ew, ealive = g.edge_arrays()
         E, D = g.main_capacity, g.diff_capacity
-        deg_main = np.asarray(g.offsets[1:] - g.offsets[:-1])
-        deg_diff = np.asarray(g.d_offsets[1:] - g.d_offsets[:-1])
-        max_main = int(deg_main.max()) if deg_main.size else 0
-        max_diff = int(deg_diff.max()) if deg_diff.size else 0
+        if bounds is not None:
+            max_main, max_diff = bounds
+        else:
+            max_main = self._max_deg("main", g.offsets)
+            max_diff = self._max_deg("diff", g.d_offsets)
 
         def is_edge_fn(qs, qd):
             return diffcsr.is_edge(g, qs, qd)
@@ -326,6 +472,52 @@ class JnpEngine(Engine):
         hit = ealive & (edst < n) & dst_mask[jnp.clip(edst, 0, n - 1)]
         return jnp.zeros((n,), BOOL).at[
             jnp.where(hit, esrc, n)].set(True, mode="drop")
+
+    # -- streaming executor (fused scan) -----------------------------------
+    _compact = staticmethod(jax.jit(diffcsr.compact))
+
+    def static_wedge_bounds(self, handle):
+        g = self.handle_graph(handle)
+        return self._max_deg("main", g.offsets), g.diff_capacity
+
+    def grow(self, g: DynGraph, factor: float = 2.0) -> DynGraph:
+        cap = max(int(g.diff_capacity * factor), g.diff_capacity + 16)
+        return diffcsr.merge(g, diff_capacity=cap)
+
+    def compact_handle(self, g: DynGraph) -> DynGraph:
+        return JnpEngine._compact(g)
+
+    def _stream_scan(self, step_fn, bounds):
+        """One jitted program scanning a whole stream segment through
+        update → affected-seed → incremental repair.  Cached per
+        (step_fn, bounds); jit's own aval cache handles shape changes."""
+        key = (step_fn, bounds)
+        fn = self._stream_cache.get(key)
+        if fn is None:
+            view = self.stream_view(bounds)
+
+            def seg_run(handle, carry, batches):
+                def body(state, batch):
+                    h, c = step_fn(view, state[0], batch, state[1])
+                    return (h, c), None
+
+                (h, c), _ = jax.lax.scan(body, (handle, carry), batches)
+                return h, c, self.handle_counters(h)
+
+            fn = jax.jit(seg_run)
+            self._stream_cache[key] = fn
+        return fn
+
+    def _segment_runner(self, step_fn, handle):
+        return self._stream_scan(step_fn, self.static_wedge_bounds(handle))
+
+    def run_stream(self, handle, stream, batch_size: int, step_fn,
+                   carry, segment_size: int = 8, compact_frac: float = 0.5):
+        """Device-resident streaming executor: the ΔG batch loop becomes
+        one lax.scan per stream segment — no host round-trips between
+        batches (the shared driver in ``Engine._run_stream_fused``)."""
+        return self._run_stream_fused(handle, stream, batch_size, step_fn,
+                                      carry, segment_size, compact_frac)
 
 
 class _View:

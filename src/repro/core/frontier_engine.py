@@ -35,13 +35,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import JnpEngine, Collectives, Props
+from repro.core.engine import (JnpEngine, Collectives, Props,
+    _StreamView)
 from repro.core.ir import EdgeSweep
 from repro.graph.csr import CSR, INT, INF_W
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph
 from repro.graph.updates import UpdateBatch
-from repro.kernels.ell import Ell
+from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del)
 from repro.kernels.ell import pack_push_ell as _pack_push_ell_raw
 pack_push_ell = jax.jit(_pack_push_ell_raw, static_argnums=(1, 2))
 
@@ -58,6 +59,17 @@ def _next_pow2(x: int) -> int:
     while p < x:
         p <<= 1
     return p
+
+
+class _DenseStreamView(_StreamView):
+    """Stream-scan facade for the FrontierEngine: identical semantics,
+    but fixed points run the fused dense while_loop (jit-safe) instead
+    of the host-driven direction-optimized loop."""
+
+    def fixed_point(self, h, sw: EdgeSweep, props: Props, cond_fn,
+                    max_iter: int) -> Props:
+        return JnpEngine.fixed_point(self._engine, h, sw, props, cond_fn,
+                                     max_iter)
 
 
 class FrontierEngine(JnpEngine):
@@ -83,21 +95,47 @@ class FrontierEngine(JnpEngine):
 
     def update_del(self, h: FrontierHandle, batch: UpdateBatch):
         g = super().update_del(h.g, batch)
-        return FrontierHandle(g=g, push=pack_push_ell(g, self.k))
+        push = ell_apply_del(h.push, h.g, batch.del_src, batch.del_dst,
+                             batch.del_mask)
+        return FrontierHandle(g=g, push=push)
 
     def update_add(self, h: FrontierHandle, batch: UpdateBatch):
         g = super().update_add(h.g, batch)
-        return FrontierHandle(g=g, push=pack_push_ell(g, self.k))
+        # push layout: slots hold DESTINATIONS
+        push = ell_apply_add(h.push, h.g, g, batch.add_src, batch.add_dst,
+                             batch.add_w, batch.add_mask,
+                             slot_value=batch.add_dst,
+                             repack=lambda gg: _pack_push_ell_raw(gg, self.k))
+        return FrontierHandle(g=g, push=push)
 
     def batch_edge_flags(self, h: FrontierHandle, qs, qd, mask):
         return super().batch_edge_flags(h.g, qs, qd, mask)
 
     def count_wedges(self, h: FrontierHandle, pair_fn, lane_flags,
-                     out_example):
-        return super().count_wedges(h.g, pair_fn, lane_flags, out_example)
+                     out_example, bounds=None):
+        return super().count_wedges(h.g, pair_fn, lane_flags, out_example,
+                                    bounds=bounds)
 
     def vertex_map(self, h: FrontierHandle, fn, props):
         return fn(props)
+
+    # -- streaming executor hooks ------------------------------------------
+    def handle_graph(self, h: FrontierHandle) -> DynGraph:
+        return h.g
+
+    def grow(self, h: FrontierHandle, factor: float = 2.0) -> FrontierHandle:
+        g = JnpEngine.grow(self, h.g, factor)
+        return FrontierHandle(g=g, push=pack_push_ell(g, self.k))
+
+    def compact_handle(self, h: FrontierHandle) -> FrontierHandle:
+        g = JnpEngine._compact(h.g)
+        return FrontierHandle(g=g, push=pack_push_ell(g, self.k))
+
+    def stream_view(self, bounds=None):
+        # the direction-optimized fixed point reads |frontier| on the
+        # host per iteration — inside the fused scan we must stay on
+        # device, so stream steps get the dense while_loop lowering.
+        return _DenseStreamView(self, bounds)
 
     def sweep(self, h, sw: EdgeSweep, props: Props) -> Props:
         g = h.g if isinstance(h, FrontierHandle) else h

@@ -24,7 +24,7 @@ from repro.graph.csr import CSR, INT, INF_W
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph
 from repro.graph.updates import UpdateBatch
-from repro.kernels.ell import Ell
+from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del)
 from repro.kernels.ell import pack_ell as _pack_ell_raw
 pack_ell = jax.jit(_pack_ell_raw, static_argnums=(1, 2))
 from repro.kernels import ops as kops
@@ -45,7 +45,12 @@ class PallasEngine(JnpEngine):
         self.k = k
         self.interpret = interpret
 
-    # -- construction / updates (repack after structural change) -----------
+    # -- construction / updates --------------------------------------------
+    # The ELL pack stays device-resident across batches: tombstones and
+    # revivals patch their slots in place via lane2slot; only structural
+    # diff-pool appends (which shift diff lane positions) trigger a
+    # repack — and even that decision is a traced lax.cond, so the whole
+    # update path runs inside the streaming executor's fused scan.
     def prepare(self, csr: CSR, diff_capacity: int) -> PallasHandle:
         g = super().prepare(csr, diff_capacity)
         return PallasHandle(g=g, ell=pack_ell(g, self.k))
@@ -59,20 +64,41 @@ class PallasEngine(JnpEngine):
 
     def update_del(self, h: PallasHandle, batch: UpdateBatch) -> PallasHandle:
         g = super().update_del(h.g, batch)
-        return PallasHandle(g=g, ell=pack_ell(g, self.k))
+        ell = ell_apply_del(h.ell, h.g, batch.del_src, batch.del_dst,
+                            batch.del_mask)
+        return PallasHandle(g=g, ell=ell)
 
     def update_add(self, h: PallasHandle, batch: UpdateBatch) -> PallasHandle:
         g = super().update_add(h.g, batch)
-        return PallasHandle(g=g, ell=pack_ell(g, self.k))
+        # pull layout: slots hold SOURCES
+        ell = ell_apply_add(h.ell, h.g, g, batch.add_src, batch.add_dst,
+                            batch.add_w, batch.add_mask,
+                            slot_value=batch.add_src,
+                            repack=lambda gg: _pack_ell_raw(gg, self.k))
+        return PallasHandle(g=g, ell=ell)
 
     def batch_edge_flags(self, h: PallasHandle, qs, qd, mask):
         return super().batch_edge_flags(h.g, qs, qd, mask)
 
-    def count_wedges(self, h: PallasHandle, pair_fn, lane_flags, out_example):
-        return super().count_wedges(h.g, pair_fn, lane_flags, out_example)
+    def count_wedges(self, h: PallasHandle, pair_fn, lane_flags, out_example,
+                     bounds=None):
+        return super().count_wedges(h.g, pair_fn, lane_flags, out_example,
+                                    bounds=bounds)
 
     def vertex_map(self, h: PallasHandle, fn, props):
         return fn(props)
+
+    # -- streaming executor hooks ------------------------------------------
+    def handle_graph(self, h: PallasHandle) -> DynGraph:
+        return h.g
+
+    def grow(self, h: PallasHandle, factor: float = 2.0) -> PallasHandle:
+        g = super().grow(h.g, factor)
+        return PallasHandle(g=g, ell=pack_ell(g, self.k))
+
+    def compact_handle(self, h: PallasHandle) -> PallasHandle:
+        g = JnpEngine._compact(h.g)
+        return PallasHandle(g=g, ell=pack_ell(g, self.k))
 
     # -- kernelized sweep ----------------------------------------------------
     def _kernel_compatible(self, sw: EdgeSweep) -> bool:

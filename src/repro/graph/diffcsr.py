@@ -22,7 +22,11 @@ TPU adaptation (XLA needs static shapes; scatter-atomics become masks):
     explicit and fault-tolerant.
 
 Everything here is pure-functional and jit-compatible; ``merge`` is the
-one host-side (numpy) op, mirroring the paper's occasional compaction.
+one host-side (numpy) op, reserved for *capacity growth*.  Routine
+maintenance stays on device: ``update_csr_add`` keeps the diff pool
+sorted with an O(B log D) sorted-merge insert (no full-pool re-sort),
+and ``compact`` reclaims tombstoned diff slots under jit without
+changing shapes (DESIGN.md §2/§3).
 """
 from __future__ import annotations
 
@@ -132,6 +136,50 @@ def _locate_diff(g: DynGraph, qs: jax.Array, qd: jax.Array):
     return safe, found
 
 
+def update_lanes(g: DynGraph, qs, qd, mask):
+    """(lane, active) of batch edges in the E+D lane space of ``g`` —
+    the addressing used to patch ELL packs in place."""
+    E, D = g.main_capacity, g.diff_capacity
+    p1, f1 = _locate_main(g, qs, qd)
+    p2, f2 = _locate_diff(g, qs, qd)
+    in_main = f1 & mask
+    in_diff = f2 & mask & ~f1
+    lane = jnp.where(in_main, p1, jnp.where(in_diff, E + p2, E + D))
+    return lane, in_main | in_diff
+
+
+def _pair_searchsorted(a_src: jax.Array, a_dst: jax.Array,
+                       q_src: jax.Array, q_dst: jax.Array,
+                       iters: int) -> jax.Array:
+    """Branchless lexicographic searchsorted: for each query pair, the
+    first index i with (a_src[i], a_dst[i]) >= (q_src, q_dst).  The key
+    arrays must be sorted by (src, dst); avoids int64 combined keys."""
+    lo = jnp.zeros(q_src.shape, INT)
+    hi = jnp.full(q_src.shape, a_src.shape[0], INT)
+    cap = max(int(a_src.shape[0]) - 1, 0)
+
+    def body(_, carry):
+        lo, hi = carry
+        active = lo < hi
+        mid = (lo + hi) // 2
+        safe = jnp.clip(mid, 0, cap)
+        ms, md = a_src[safe], a_dst[safe]
+        pred = (ms < q_src) | ((ms == q_src) & (md < q_dst))
+        lo = jnp.where(active & pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def _log2_iters(length: int) -> int:
+    it = 1
+    while (1 << it) < length + 1:
+        it += 1
+    return it + 1
+
+
 def is_edge(g: DynGraph, qs: jax.Array, qd: jax.Array) -> jax.Array:
     """Vectorized alive-edge membership (u->v). qs/qd any broadcastable shape."""
     qs = jnp.asarray(qs, INT)
@@ -223,19 +271,40 @@ def update_csr_add(g: DynGraph, add_src: jax.Array, add_dst: jax.Array,
 
     d = g.diff_capacity
     used = jnp.sum((g.d_src < g.n).astype(INT))
-    slot = used + jnp.cumsum(s_fresh.astype(INT)) - 1
-    fits = s_fresh & (slot < d)
+    # Sorted-merge insert (replaces the old full-pool lexsort): the pool
+    # is already sorted by (src, dst) with vacant rows (src = n) sunk to
+    # the end, and the admitted fresh edges are sorted within the batch —
+    # so every row's post-merge position is its own rank plus the count
+    # of keys from the other sorted list below it.  O((B + D)·log) gather
+    # rounds, no O(D log D) re-sort of the pool.
+    fresh_rank = jnp.cumsum(s_fresh.astype(INT)) - 1
+    fits = s_fresh & (used + fresh_rank < d)
     overflow = g.overflow + jnp.sum((s_fresh & ~fits).astype(INT))
-    tgt = jnp.where(fits, slot, d)
     if d:
-        d_src = g.d_src.at[tgt].set(s_src, mode="drop")
-        d_dst = g.d_dst.at[tgt].set(s_dst, mode="drop")
-        d_wn = d_w.at[tgt].set(s_w, mode="drop")
-        d_al = d_alive.at[tgt].set(True, mode="drop")
-        # 4) re-sort the diff pool by (src, dst); dead-slot rows (src=n) sink.
-        order = jnp.lexsort((d_dst, d_src))
-        d_src, d_dst, d_wn, d_al = (d_src[order], d_dst[order],
-                                    d_wn[order], d_al[order])
+        # compact the admitted fresh edges into a sorted (B,)-padded list
+        f_src = jnp.full((B,), g.n, INT)
+        f_dst = jnp.zeros((B,), INT)
+        ftgt = jnp.where(fits, fresh_rank, B)
+        f_src = f_src.at[ftgt].set(s_src, mode="drop")
+        f_dst = f_dst.at[ftgt].set(s_dst, mode="drop")
+        # merged position of each existing pool row / each admitted edge.
+        # Fresh edges are never equal to a materialized pool key (they
+        # would have been revivals), so ties cannot occur.
+        cnt_f = _pair_searchsorted(f_src, f_dst, g.d_src, g.d_dst,
+                                   _log2_iters(B))
+        cnt_p = _pair_searchsorted(g.d_src, g.d_dst, s_src, s_dst,
+                                   _log2_iters(d))
+        pool_rows = (g.d_src < g.n)
+        pool_pos = jnp.where(pool_rows, jnp.arange(d, dtype=INT) + cnt_f, d)
+        fresh_pos = jnp.where(fits, fresh_rank + cnt_p, d)
+        d_src = jnp.full((d,), g.n, INT).at[pool_pos].set(
+            g.d_src, mode="drop").at[fresh_pos].set(s_src, mode="drop")
+        d_dst = jnp.zeros((d,), INT).at[pool_pos].set(
+            g.d_dst, mode="drop").at[fresh_pos].set(s_dst, mode="drop")
+        d_wn = jnp.zeros((d,), INT).at[pool_pos].set(
+            d_w, mode="drop").at[fresh_pos].set(s_w, mode="drop")
+        d_al = jnp.zeros((d,), BOOL).at[pool_pos].set(
+            d_alive, mode="drop").at[fresh_pos].set(True, mode="drop")
         d_offsets = jnp.searchsorted(d_src, jnp.arange(g.n + 1, dtype=INT),
                                      side="left").astype(INT)
     else:
@@ -244,6 +313,44 @@ def update_csr_add(g: DynGraph, add_src: jax.Array, add_dst: jax.Array,
     return dataclasses.replace(
         g, alive=alive, w=w, d_src=d_src, d_dst=d_dst, d_w=d_wn,
         d_alive=d_al, d_offsets=d_offsets, overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# compact — on-device reclamation of tombstoned diff slots (jit-compatible)
+# ---------------------------------------------------------------------------
+
+def compact(g: DynGraph) -> DynGraph:
+    """Drop dead diff-pool rows in place, keeping shapes static.
+
+    A tombstoned diff edge (materialized but ``d_alive == False``) holds a
+    pool slot it no longer needs.  This stable left-compaction of the
+    alive rows reclaims those slots without leaving jit — the routine
+    merge of the paper's merge policy.  Host-side :func:`merge` remains
+    only for capacity growth (true overflow).  Row order is preserved, so
+    the pool stays sorted by (src, dst) and ``d_offsets`` stays exact.
+    """
+    d = g.diff_capacity
+    if not d:
+        return g
+    keep = g.d_alive & (g.d_src < g.n)
+    pos = jnp.cumsum(keep.astype(INT)) - 1
+    tgt = jnp.where(keep, pos, d)
+    d_src = jnp.full((d,), g.n, INT).at[tgt].set(g.d_src, mode="drop")
+    d_dst = jnp.zeros((d,), INT).at[tgt].set(g.d_dst, mode="drop")
+    d_w = jnp.zeros((d,), INT).at[tgt].set(g.d_w, mode="drop")
+    d_alive = jnp.zeros((d,), BOOL).at[tgt].set(True, mode="drop")
+    d_offsets = jnp.searchsorted(d_src, jnp.arange(g.n + 1, dtype=INT),
+                                 side="left").astype(INT)
+    return dataclasses.replace(g, d_src=d_src, d_dst=d_dst, d_w=d_w,
+                               d_alive=d_alive, d_offsets=d_offsets)
+
+
+def pool_counters(g: DynGraph) -> jax.Array:
+    """(overflow, used, dead) int32 triple — the merge-pressure counters
+    the streaming executor reads once per stream segment."""
+    used = jnp.sum((g.d_src < g.n).astype(INT))
+    dead = jnp.sum(((g.d_src < g.n) & ~g.d_alive).astype(INT))
+    return jnp.stack([g.overflow, used, dead])
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,16 @@ class UpdateStream:
         for i in range(self.num_batches(batch_size)):
             yield self.batch(i, batch_size)
 
+    def stacked(self, batch_size: int, start: int = 0,
+                count: int | None = None) -> UpdateBatch:
+        """A (count, B)-leaved UpdateBatch pytree — the padded batch
+        stream segment that ``Engine.run_stream`` lax.scans over."""
+        nb = self.num_batches(batch_size)
+        if count is None:
+            count = nb - start
+        bs = [self.batch(start + j, batch_size) for j in range(count)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *bs)
+
 
 def random_updates(csr: CSR, percent: float, seed: int = 0,
                    max_w: int = 100, add_frac: float = 0.5) -> UpdateStream:

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graph.csr import INT
-from repro.graph.diffcsr import DynGraph
+from repro.graph.diffcsr import DynGraph, update_lanes
 
 
 @jax.tree_util.register_dataclass
@@ -39,6 +39,10 @@ class Ell:
     ell_src: jax.Array    # (R, K) int32, sentinel n
     ell_w: jax.Array      # (R, K) int32
     row2dst: jax.Array    # (R,) int32, sentinel n
+    # (E+D,) flat slot index (< R*K) of every materialized edge lane,
+    # sentinel R*K for unmaterialized diff rows — lets revive/tombstone
+    # batches patch the pack in place instead of rebuilding it.
+    lane2slot: jax.Array
     n: int = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -55,11 +59,23 @@ def ell_capacity(n: int, e_cap: int, k: int, row_tile: int = 128) -> int:
     return -(-r // row_tile) * row_tile
 
 
+def _materialized(g: DynGraph) -> jax.Array:
+    """Lanes that own a pack slot: every main lane (dead ones keep their
+    slot so a later revival can patch in place) + occupied diff rows."""
+    return jnp.concatenate(
+        [jnp.ones((g.main_capacity,), jnp.bool_), g.d_src < g.n])
+
+
 def pack_ell(g: DynGraph, k: int = 8, row_tile: int = 128) -> Ell:
-    """Repack the alive edge set (main + diff regions) into row-split ELL
-    grouped by DESTINATION (pull layout — the SpMV/relax kernels)."""
+    """Repack the edge set (main + diff regions) into row-split ELL
+    grouped by DESTINATION (pull layout — the SpMV/relax kernels).
+
+    Every materialized lane gets a slot, dead lanes holding the sentinel
+    src == n: revive/tombstone batches then patch the pack in place via
+    ``lane2slot`` (patch_ell_*); only structural diff-pool appends —
+    which shift diff lane positions — force a rebuild."""
     esrc, edst, ew, ealive = g.edge_arrays()
-    return _pack(g.n, esrc, edst, ew, ealive, k, row_tile)
+    return _pack(g.n, esrc, edst, ew, _materialized(g), ealive, k, row_tile)
 
 
 def pack_push_ell(g: DynGraph, k: int = 8, row_tile: int = 128) -> Ell:
@@ -72,21 +88,23 @@ def pack_push_ell(g: DynGraph, k: int = 8, row_tile: int = 128) -> Ell:
     ``ell_src`` holds the edge DESTINATIONS.
     """
     esrc, edst, ew, ealive = g.edge_arrays()
-    return _pack(g.n, edst, esrc, ew, ealive, k, row_tile)
+    return _pack(g.n, edst, esrc, ew, _materialized(g), ealive, k, row_tile)
 
 
-def _pack(n, eother, egroup, ew, ealive, k, row_tile) -> Ell:
-    """Group edges by ``egroup``; slots hold ``eother`` endpoints."""
+def _pack(n, eother, egroup, ew, emat, ealive, k, row_tile) -> Ell:
+    """Group materialized lanes by ``egroup``; slots hold ``eother``
+    endpoints for alive lanes and the sentinel n for tombstoned ones."""
     E = egroup.shape[0]
     R = ell_capacity(n, E, k, row_tile)
 
-    # Sort alive edges by the grouping endpoint; dead edges sink to a
-    # sentinel group.
-    sdst = jnp.where(ealive, egroup, n)
+    # Sort materialized lanes by the grouping endpoint; unmaterialized
+    # lanes sink to a sentinel group.
+    sdst = jnp.where(emat, egroup, n)
     order = jnp.argsort(sdst, stable=True)
     sdst = sdst[order]
-    ssrc = eother[order]
-    sw = ew[order]
+    salive = ealive[order]
+    ssrc = jnp.where(salive, eother[order], n)
+    sw = jnp.where(salive, ew[order], 0)
     # Rank within the destination group.
     start = jnp.searchsorted(sdst, sdst, side="left")
     rank = jnp.arange(E, dtype=INT) - start.astype(INT)
@@ -104,5 +122,60 @@ def _pack(n, eother, egroup, ew, ealive, k, row_tile) -> Ell:
     ell_w = jnp.zeros((R * k,), INT).at[flat].set(sw, mode="drop")
     row2dst = jnp.full((R,), n, INT).at[jnp.where(valid, row, R)].set(
         jnp.minimum(sdst, n), mode="drop")
+    lane2slot = jnp.full((E,), R * k, INT).at[order].set(flat)
     return Ell(ell_src=ell_src.reshape(R, k), ell_w=ell_w.reshape(R, k),
-               row2dst=row2dst, n=n)
+               row2dst=row2dst, lane2slot=lane2slot, n=n)
+
+
+# ---------------------------------------------------------------------------
+# In-place maintenance: revive / tombstone without repacking (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def _lane_slots(ell: Ell, lane: jax.Array, active: jax.Array) -> jax.Array:
+    cap = ell.lane2slot.shape[0]
+    slot = ell.lane2slot[jnp.clip(lane, 0, max(cap - 1, 0))]
+    return jnp.where(active & (lane < cap), slot, ell.R * ell.K)
+
+
+def patch_ell_tombstone(ell: Ell, lane: jax.Array,
+                        mask: jax.Array) -> Ell:
+    """Clear the slots of tombstoned edge lanes (set sentinel src = n);
+    the slot stays reserved for a later revival."""
+    slot = _lane_slots(ell, lane, mask)
+    src = ell.ell_src.reshape(-1).at[slot].set(ell.n, mode="drop")
+    return dataclasses.replace(ell, ell_src=src.reshape(ell.R, ell.K))
+
+
+def patch_ell_revive(ell: Ell, lane: jax.Array, value: jax.Array,
+                     w: jax.Array, mask: jax.Array) -> Ell:
+    """Re-arm the slots of revived lanes with their non-grouping endpoint
+    (source for the pull layout, destination for push) and weight."""
+    slot = _lane_slots(ell, lane, mask)
+    src = ell.ell_src.reshape(-1).at[slot].set(value, mode="drop")
+    ww = ell.ell_w.reshape(-1).at[slot].set(w, mode="drop")
+    return dataclasses.replace(ell, ell_src=src.reshape(ell.R, ell.K),
+                               ell_w=ww.reshape(ell.R, ell.K))
+
+
+def ell_apply_del(ell: Ell, g_prev: DynGraph, src, dst, mask) -> Ell:
+    """A deletion batch against the pack: tombstones only flip slots in
+    place, so no repack is ever needed."""
+    lane, active = update_lanes(g_prev, src, dst, mask)
+    return patch_ell_tombstone(ell, lane, active)
+
+
+def ell_apply_add(ell: Ell, g_prev: DynGraph, g_new: DynGraph,
+                  src, dst, w, mask, slot_value, repack) -> Ell:
+    """An addition batch against the pack.  Revivals resolve against the
+    PRE-update graph: lane positions only move when fresh edges were
+    appended to the diff pool, and then ``repack`` rebuilds the pack —
+    a traced lax.cond, so the whole path runs inside the fused scan.
+    ``slot_value`` is the non-grouping endpoint stored in the slots
+    (source for the pull layout, destination for push)."""
+    lane, active = update_lanes(g_prev, src, dst, mask)
+    structural = jnp.any(g_new.d_offsets != g_prev.d_offsets)
+    return jax.lax.cond(
+        structural,
+        lambda _: repack(g_new),
+        lambda _: patch_ell_revive(ell, lane, slot_value, w, active),
+        operand=None)

@@ -285,6 +285,56 @@ def assert_pagerank(engine_cls, sc: Scenario, beta=1e-4, delta=0.85,
         err_msg=f"[{sc.name}] hand-staged dyn_pr != oracle")
 
 
+def assert_sssp_stream(engine_cls, sc: Scenario, segment_size: int = 4):
+    """Streaming-executor cell: run_stream(batches) must stay
+    oracle-exact — same contract as the per-batch dispatch path."""
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                         sc.stream.adds, sc.stream.dels)
+    ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, props = hand_sssp.dyn_sssp_stream(eng, g, sc.src, sc.stream,
+                                         sc.batch_size,
+                                         segment_size=segment_size)
+    got = np.minimum(np.asarray(props["dist"])[: sc.n].astype(np.int64),
+                     oracles.INF)
+    np.testing.assert_array_equal(
+        got, ref, err_msg=f"[{sc.name}] dyn_sssp_stream != oracle")
+
+
+def assert_pagerank_stream(engine_cls, sc: Scenario, beta=1e-4, delta=0.85,
+                           max_iter=100, rtol=5e-2, atol=1e-4,
+                           segment_size: int = 4):
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                        sc.stream.adds, sc.stream.dels)
+    ref = oracles.pagerank_oracle(sc.n, e2, beta=beta, delta=delta,
+                                  max_iter=max_iter)
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, props = hand_pr.dyn_pr_stream(eng, g, sc.stream, sc.batch_size,
+                                     beta=beta, delta=delta,
+                                     max_iter=max_iter,
+                                     segment_size=segment_size)
+    np.testing.assert_allclose(
+        np.asarray(props["pr"])[: sc.n], ref, rtol=rtol, atol=atol,
+        err_msg=f"[{sc.name}] dyn_pr_stream != oracle")
+
+
+def assert_tc_stream(engine_cls, sc: Scenario, segment_size: int = 4):
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                        sc.stream.adds, sc.stream.dels)
+    ref = oracles.tc_oracle(sc.n, e2)
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
+    _, count = hand_tc.dyn_tc_stream(eng, g, sc.stream, sc.batch_size,
+                                     segment_size=segment_size)
+    assert int(count) == ref, \
+        f"[{sc.name}] dyn_tc_stream {int(count)} != oracle {ref}"
+
+
 def assert_tc(engine_cls, sc: Scenario):
     csr = build_csr(sc.n, sc.edges, sc.w)
     res = program("tc").run(

@@ -9,10 +9,12 @@ fast lane; the rest carry the `slow` marker and run in the full lane.
 """
 import pytest
 
-from conformance import (assert_pagerank, assert_sssp, assert_tc,
-                         digraph_scenario, sym_scenario)
+from conformance import (assert_pagerank, assert_pagerank_stream,
+                         assert_sssp, assert_sssp_stream, assert_tc,
+                         assert_tc_stream, digraph_scenario, sym_scenario)
 from repro.core.engine import JnpEngine
 from repro.core.dist import DistEngine
+from repro.core.frontier_engine import FrontierEngine
 from repro.core.pallas_engine import PallasEngine
 
 ENGINES = [JnpEngine, DistEngine, PallasEngine]
@@ -57,3 +59,48 @@ def test_conformance_pagerank(scenario, engine_cls):
                          _cells(TC_SCENARIOS, [JnpEngine, PallasEngine]))
 def test_conformance_tc(scenario, engine_cls):
     assert_tc(engine_cls, sym_scenario(scenario))
+
+
+# ---------------------------------------------------------------------------
+# Streaming-executor cells: the same scenarios driven through
+# Engine.run_stream (one fused lax.scan per segment) must stay
+# oracle-exact on every engine.  Scenario-representative subset per
+# program keeps the fast lane fast; dist cells follow the DIST_FAST rule.
+# ---------------------------------------------------------------------------
+
+STREAM_SSSP = ["batch1", "batch8", "empty", "dup_in_batch", "del_then_readd"]
+STREAM_PR = ["batch1", "batch8", "del_then_readd"]
+STREAM_TC = ["sym_batch2", "sym_empty", "sym_del_readd"]
+# the dist stream cell that stays fast (fewest shard_map traces)
+DIST_STREAM_FAST = {"batch8"}
+
+
+def _stream_cells(scenarios, engines):
+    out = []
+    for s in scenarios:
+        for e in engines:
+            marks = ()
+            if e is DistEngine and s not in DIST_STREAM_FAST:
+                marks = (pytest.mark.slow,)
+            out.append(pytest.param(s, e, marks=marks,
+                                    id=f"stream-{s}-{e.name}"))
+    return out
+
+
+@pytest.mark.parametrize("scenario,engine_cls",
+                         _stream_cells(STREAM_SSSP,
+                                       ENGINES + [FrontierEngine]))
+def test_stream_conformance_sssp(scenario, engine_cls):
+    assert_sssp_stream(engine_cls, digraph_scenario(scenario))
+
+
+@pytest.mark.parametrize("scenario,engine_cls",
+                         _stream_cells(STREAM_PR, ENGINES + [FrontierEngine]))
+def test_stream_conformance_pagerank(scenario, engine_cls):
+    assert_pagerank_stream(engine_cls, digraph_scenario(scenario))
+
+
+@pytest.mark.parametrize("scenario,engine_cls",
+                         _stream_cells(STREAM_TC, [JnpEngine, PallasEngine]))
+def test_stream_conformance_tc(scenario, engine_cls):
+    assert_tc_stream(engine_cls, sym_scenario(scenario))

@@ -1,0 +1,207 @@
+"""Streaming-executor + diff-pool maintenance tests (DESIGN.md §3).
+
+Covers the paths the conformance matrix cannot see directly:
+  * diff-pool overflow: the counter trips, the host-side merge recovers,
+    and no edge is silently lost (numpy dict oracle);
+  * on-device compact(): tombstoned slots are reclaimed in place, the
+    pool stays sorted, the edge set is unchanged;
+  * run_stream segment replay: a stream that overflows mid-segment rolls
+    back, grows capacity and replays to the oracle-exact answer;
+  * in-place ELL patching: revive/tombstone batches patch the pack
+    (lane2slot) to exactly what a from-scratch repack would build.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graph import build_csr, from_csr, update_csr_add, update_csr_del, \
+    merge, is_edge
+from repro.graph import diffcsr
+from repro.graph.updates import UpdateStream, random_updates
+from repro.core.engine import Engine, JnpEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.core.frontier_engine import FrontierEngine
+from repro.kernels.ell import pack_ell, pack_push_ell
+from repro.algos import sssp, oracles
+
+
+def _graph(n=48, deg=4, seed=7, max_w=30):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(n * deg, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    w = rng.integers(1, max_w, size=len(e)).astype(np.int32)
+    csr = build_csr(n, e, w)
+    e0 = np.stack([np.asarray(csr.src), np.asarray(csr.dst)], 1) \
+        .astype(np.int64)
+    return csr, e0, np.asarray(csr.w)
+
+
+def _edge_set(g):
+    es, ed, _, ea = (np.asarray(x) for x in g.edge_arrays())
+    return set(map(tuple, np.stack([es[ea], ed[ea]], 1).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# diff-pool overflow: trip → merge → recover, no silent loss
+# ---------------------------------------------------------------------------
+
+def test_overflow_trips_and_merge_recovers():
+    n = 16
+    g = from_csr(build_csr(n, np.array([(0, 1)])), diff_capacity=3)
+    # 6 fresh edges into a 3-slot pool: 3 admitted, 3 counted as dropped
+    qs = jnp.asarray(np.array([1, 2, 3, 4, 5, 6], np.int32))
+    qd = jnp.asarray(np.array([2, 3, 4, 5, 6, 7], np.int32))
+    g1 = update_csr_add(g, qs, qd)
+    assert int(g1.overflow) == 3
+    # the oracle protocol (Engine.run_stream's): roll back to the
+    # pre-batch graph, merge with grown capacity, replay the batch
+    g2 = update_csr_add(merge(g, diff_capacity=16), qs, qd)
+    assert int(g2.overflow) == 0
+    want = {(0, 1)} | set(zip(qs.tolist(), qd.tolist()))
+    assert _edge_set(g2) == want, "edges lost across overflow recovery"
+
+
+def test_overflow_admits_prefix_never_drops_existing():
+    """Admitted adds fill the remaining slots; pre-existing pool edges
+    are never displaced by an overflowing batch."""
+    n = 16
+    g = from_csr(build_csr(n, np.array([(0, 1)])), diff_capacity=3)
+    g = update_csr_add(g, jnp.asarray([2], jnp.int32),
+                       jnp.asarray([3], jnp.int32))
+    before = _edge_set(g)
+    g1 = update_csr_add(g, jnp.asarray([4, 5, 6], jnp.int32),
+                        jnp.asarray([5, 6, 7], jnp.int32))
+    assert int(g1.overflow) == 1
+    after = _edge_set(g1)
+    assert before <= after, "existing edges displaced by overflow"
+    assert len(after) == len(before) + 2     # exactly the admitted adds
+
+
+# ---------------------------------------------------------------------------
+# on-device compact
+# ---------------------------------------------------------------------------
+
+def test_compact_reclaims_tombstones_in_place():
+    n = 24
+    rng = np.random.default_rng(0)
+    g = from_csr(build_csr(n, np.zeros((0, 2), np.int64)), diff_capacity=16)
+    e = rng.integers(0, n, size=(12, 2)).astype(np.int32)
+    e = e[e[:, 0] != e[:, 1]][:10]
+    g = update_csr_add(g, jnp.asarray(e[:, 0]), jnp.asarray(e[:, 1]))
+    # tombstone half the pool
+    g = update_csr_del(g, jnp.asarray(e[:5, 0]), jnp.asarray(e[:5, 1]))
+    want = _edge_set(g)
+    used0 = int(jnp.sum(g.d_src < g.n))
+    dead0 = int(diffcsr.pool_counters(g)[2])
+    assert dead0 > 0
+    gc = diffcsr.compact(g)
+    assert _edge_set(gc) == want
+    assert int(jnp.sum(gc.d_src < gc.n)) == used0 - dead0
+    assert int(diffcsr.pool_counters(gc)[2]) == 0
+    # pool stays sorted by (src, dst) with vacant rows sunk
+    ds, dd = np.asarray(gc.d_src), np.asarray(gc.d_dst)
+    key = ds.astype(np.int64) * (n + 1) + dd
+    assert (np.diff(key) >= 0).all()
+    # freed slots are reusable: the next adds append without overflow
+    g2 = update_csr_add(gc, jnp.asarray(e[:5, 0]), jnp.asarray(e[:5, 1]))
+    assert int(g2.overflow) == 0
+    assert _edge_set(g2) == want | set(map(tuple, e[:5].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# run_stream: fused == per-batch == oracle, incl. overflow segment replay
+# ---------------------------------------------------------------------------
+
+STREAM_ENGINES = [JnpEngine, PallasEngine, FrontierEngine]
+
+
+@pytest.mark.parametrize("engine_cls", STREAM_ENGINES,
+                         ids=[e.name for e in STREAM_ENGINES])
+def test_run_stream_overflow_replay_oracle_exact(engine_cls):
+    csr, e0, w0 = _graph()
+    ups = random_updates(csr, percent=40, seed=3)
+    e2, w2 = oracles.edges_after_updates(csr.n, e0, w0, ups.adds, ups.dels)
+    ref = oracles.sssp_oracle(csr.n, e2, w2, 0)
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=4)      # guaranteed overflow
+    g2, props = sssp.dyn_sssp_stream(eng, g, 0, ups, batch_size=4,
+                                     segment_size=3)
+    got = np.minimum(np.asarray(props["dist"])[: csr.n].astype(np.int64),
+                     oracles.INF)
+    np.testing.assert_array_equal(got, ref)
+    gg = eng.handle_graph(g2)
+    assert int(gg.overflow) == 0               # recovery cleared the counter
+    assert gg.diff_capacity > 4                # capacity actually grew
+
+
+@pytest.mark.parametrize("engine_cls", STREAM_ENGINES,
+                         ids=[e.name for e in STREAM_ENGINES])
+def test_run_stream_matches_per_batch_dispatch(engine_cls):
+    csr, e0, w0 = _graph(seed=11)
+    ups = random_updates(csr, percent=20, seed=5)
+    eng = engine_cls()
+    g = eng.prepare(csr, diff_capacity=64)
+    props0 = sssp.static_sssp(eng, g, 0)
+    _, p_fused = sssp.dyn_sssp_stream(eng, g, 0, ups, 8, props=props0,
+                                      segment_size=2)
+    _, p_batch = sssp.dyn_sssp(eng, g, 0, ups, 8, props=props0)
+    np.testing.assert_array_equal(np.asarray(p_fused["dist"]),
+                                  np.asarray(p_batch["dist"]))
+
+
+def test_run_stream_baseline_dispatch_recovers():
+    """Engine.run_stream (the per-batch baseline) also grows + replays."""
+    csr, e0, w0 = _graph(seed=13)
+    ups = random_updates(csr, percent=40, seed=3)
+    e2, w2 = oracles.edges_after_updates(csr.n, e0, w0, ups.adds, ups.dels)
+    ref = oracles.sssp_oracle(csr.n, e2, w2, 0)
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=4)
+    props0 = sssp.static_sssp(eng, g, 0)
+    _, props = Engine.run_stream(eng, g, ups, 4, sssp.stream_step, props0)
+    got = np.minimum(np.asarray(props["dist"])[: csr.n].astype(np.int64),
+                     oracles.INF)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# in-place ELL patching == from-scratch repack
+# ---------------------------------------------------------------------------
+
+def _ell_semantics(ell):
+    """Multiset of (group_vertex, other_endpoint, w) alive slots."""
+    n = ell.n
+    row2 = np.asarray(ell.row2dst)
+    src = np.asarray(ell.ell_src)
+    w = np.asarray(ell.ell_w)
+    out = []
+    for r in range(ell.R):
+        if row2[r] >= n:
+            continue
+        for k in range(ell.K):
+            if src[r, k] < n:
+                out.append((int(row2[r]), int(src[r, k]), int(w[r, k])))
+    return sorted(out)
+
+
+@pytest.mark.parametrize("engine_cls,packer", [
+    (PallasEngine, pack_ell), (FrontierEngine, pack_push_ell)],
+    ids=["pallas-pull", "frontier-push"])
+def test_ell_patch_matches_repack(engine_cls, packer):
+    csr, e0, w0 = _graph(n=32, seed=17)
+    eng = engine_cls()
+    h = eng.prepare(csr, diff_capacity=32)
+    # delete a few existing edges (pure tombstone batch: patch path)
+    rng = np.random.default_rng(2)
+    idx = rng.choice(len(e0), size=6, replace=False)
+    b_del = UpdateStream(adds=np.zeros((0, 3), np.int32),
+                         dels=e0[idx].astype(np.int32)).batch(0, 8)
+    h = eng.update_del(h, b_del)
+    # revive two of them with new weights (pure revive batch: patch path)
+    readds = np.concatenate([e0[idx[:2]], [[7], [9]]], axis=1)
+    b_add = UpdateStream(adds=readds.astype(np.int32),
+                         dels=np.zeros((0, 2), np.int32)).batch(0, 8)
+    h = eng.update_add(h, b_add)
+    ell = h.ell if engine_cls is PallasEngine else h.push
+    assert _ell_semantics(ell) == _ell_semantics(packer(h.g, eng.k)), \
+        "patched ELL diverged from a from-scratch repack"
