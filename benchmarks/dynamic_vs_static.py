@@ -14,15 +14,10 @@ import numpy as np
 
 from common import timeit, emit, bench_graphs
 from repro.graph import build_csr, random_updates
-from repro.core.engine import JnpEngine
-from repro.core.pallas_engine import PallasEngine
-from repro.core.dist import DistEngine
-from repro.core.frontier_engine import FrontierEngine
+from repro.core.registry import make_engine
 from repro.algos import sssp, pagerank
 
 PERCENTS = (1, 5, 10, 20)
-ENGINES = {"jnp": JnpEngine, "pallas": PallasEngine, "dist": DistEngine,
-           "frontier": FrontierEngine}
 
 
 def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
@@ -34,7 +29,7 @@ def run(percents=PERCENTS, engines=("jnp", "pallas", "frontier"),
         keep = edges[:, 0] != edges[:, 1]
         csr = build_csr(n, edges[keep], w[keep])
         for ename in engines:
-            eng = ENGINES[ename]()
+            eng = make_engine(ename)
             for pct in percents:
                 ups = random_updates(csr, percent=pct, seed=42)
                 cap = max(2 * ups.num_adds, 16)
@@ -108,7 +103,7 @@ def run_tc(percents=(1, 5), engines=("jnp",), small=True):
     e, w2 = oracles.symmetrize(edges[keep], w[keep])
     csr = build_csr(n, e)
     for ename in engines:
-        eng = ENGINES[ename]()
+        eng = make_engine(ename)
         for pct in percents:
             ups0 = random_updates(csr, percent=pct, seed=3)
             adds = np.stack([ups0.adds, ups0.adds[:, [1, 0, 2]]],

@@ -12,7 +12,7 @@ import numpy as np
 from common import timeit, emit
 from repro.graph import build_csr, random_updates
 from repro.graph.csr import uniform_graph
-from repro.core.engine import JnpEngine
+from repro.core.registry import make_engine
 from repro.algos import sssp
 
 
@@ -20,7 +20,7 @@ def run(n=4096, deg=8, pct=20, batch=64, cadences=(0, 1, 4, 16)):
     n, edges, w = uniform_graph(n, deg, seed=5)
     keep = edges[:, 0] != edges[:, 1]
     csr = build_csr(n, edges[keep], w[keep])
-    eng = JnpEngine()
+    eng = make_engine("jnp")
     ups = random_updates(csr, percent=pct, seed=11)
     nb = ups.num_batches(batch)
 

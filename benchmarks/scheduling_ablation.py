@@ -9,9 +9,7 @@ from __future__ import annotations
 
 from common import timeit, emit, bench_graphs
 from repro.graph import build_csr
-from repro.core.engine import JnpEngine
-from repro.core.pallas_engine import PallasEngine
-from repro.core.dist import DistEngine
+from repro.core.registry import make_engine
 from repro.algos import sssp
 
 
@@ -20,11 +18,11 @@ def run(small=False):
     for gname, (n, edges, w) in graphs.items():
         keep = edges[:, 0] != edges[:, 1]
         csr = build_csr(n, edges[keep], w[keep])
-        variants = [("jnp-segment", JnpEngine()),
-                    ("dist", DistEngine()),
-                    ("ell-k4", PallasEngine(k=4)),
-                    ("ell-k8", PallasEngine(k=8)),
-                    ("ell-k16", PallasEngine(k=16))]
+        variants = [("jnp-segment", make_engine("jnp")),
+                    ("dist", make_engine("dist")),
+                    ("ell-k4", make_engine("pallas", k=4)),
+                    ("ell-k8", make_engine("pallas", k=8)),
+                    ("ell-k16", make_engine("pallas", k=16))]
         for vname, eng in variants:
             g = eng.prepare(csr, diff_capacity=16)
             t = timeit(lambda: sssp.static_sssp(eng, g, 0)["dist"], iters=2)

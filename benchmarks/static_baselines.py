@@ -19,9 +19,7 @@ import numpy as np
 
 from common import timeit, emit, bench_graphs
 from repro.graph import build_csr
-from repro.core.engine import JnpEngine
-from repro.core.dist import DistEngine
-from repro.core.pallas_engine import PallasEngine
+from repro.core.registry import make_engine
 from repro.algos import sssp, pagerank, oracles
 
 
@@ -75,8 +73,8 @@ def numpy_csr_sssp(csr, src=0):
 
 def run(small=True):
     graphs = bench_graphs(small)
-    engines = [("jnp", JnpEngine()), ("dist", DistEngine()),
-               ("pallas", PallasEngine())]
+    engines = [(name, make_engine(name))
+               for name in ("jnp", "dist", "pallas")]
     for gname, (n, edges, w) in graphs.items():
         keep = edges[:, 0] != edges[:, 1]
         edges, w = edges[keep], w[keep]

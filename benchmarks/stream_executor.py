@@ -21,14 +21,8 @@ import numpy as np
 
 from common import timeit, emit, bench_graphs
 from repro.graph import build_csr, random_updates
-from repro.core.engine import JnpEngine
-from repro.core.pallas_engine import PallasEngine
-from repro.core.frontier_engine import FrontierEngine
-from repro.core.dist import DistEngine
+from repro.core.registry import make_engine
 from repro.algos import sssp
-
-ENGINES = {"jnp": JnpEngine, "pallas": PallasEngine, "dist": DistEngine,
-           "frontier": FrontierEngine}
 
 
 def run(small=True, engines=("jnp", "pallas", "frontier"),
@@ -45,7 +39,7 @@ def run(small=True, engines=("jnp", "pallas", "frontier"),
         # edge-lanes each repair sweep streams over, per batch
         lanes = csr.num_edges + max(2 * ups.num_adds, 16)
         for ename in engines:
-            eng = ENGINES[ename]()
+            eng = make_engine(ename)
             cap = max(2 * ups.num_adds, 16)
             g0 = eng.prepare(csr, diff_capacity=cap)
             props0 = sssp.static_sssp(eng, g0, 0)

@@ -1,24 +1,15 @@
-"""Quickstart: compile the paper's Dynamic SSSP DSL and run it on all
-three backends, checking the three lowerings agree.
+"""Quickstart: compile the paper's Dynamic SSSP DSL once and bind it to
+every registered backend through the public API, checking the
+lowerings agree.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
-
 import numpy as np
 
-from repro.graph import build_csr, random_updates
-from repro.core.dsl import compile_source
+import repro
 from repro.core.dsl.emit import emit_report
-from repro.core.engine import JnpEngine
-from repro.core.dist import DistEngine
-from repro.core.pallas_engine import PallasEngine
-
-PROGS = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro" / \
-    "dsl_programs"
+from repro.dsl_programs import path as program_path
+from repro.graph import build_csr, random_updates
 
 
 def main():
@@ -34,24 +25,35 @@ def main():
           f"updates: +{ups.num_adds} / -{ups.num_dels}")
 
     # compile once — the paper's pipeline: parse → analyze → stage
-    prog = compile_source(str(PROGS / "sssp.sp"))
+    prog = repro.compile(program_path("sssp"))
     print("\n--- lowering report (what the compiler decided) ---")
-    print(emit_report(prog, backend="jnp"))
+    print(emit_report(prog.program, backend="jnp"))
 
-    print("\n--- running DynSSSP on the three backends ---")
+    print("\n--- binding DynSSSP to three backends ---")
     dists = {}
-    for eng in (JnpEngine(), DistEngine(), PallasEngine()):
-        res = prog.run("DynSSSP", eng, csr,
-                       args={"updateBatch": ups, "batchSize": 16, "src": 0},
-                       diff_capacity=2 * ups.num_adds + 8)
-        dists[eng.name] = res.props["dist"]
-        reach = int((res.props["dist"] < 2**30).sum())
-        print(f"  [{eng.name:6s}] reachable={reach}  "
-              f"d(0→{n-1})={res.props['dist'][n-1]}")
+    for backend in ("jnp", "dist", "pallas"):
+        # capacity="auto" sizes the diff pool from the bound stream
+        sess = prog.bind(csr, backend=backend, capacity="auto")
+        res = sess.run("DynSSSP", updateBatch=ups, batchSize=16, src=0)
+        dist = res.props.host("dist")       # explicit device→host sync
+        dists[backend] = dist
+        reach = int((dist < 2**30).sum())
+        print(f"  [{backend:6s}] reachable={reach}  "
+              f"d(0→{n-1})={dist[n-1]}")
 
     assert np.array_equal(dists["jnp"], dists["dist"])
     assert np.array_equal(dists["jnp"], dists["pallas"])
     print("\nall three backends agree ✓")
+
+    # the long-lived streaming-consumer mode: arm the Batch loop, feed
+    # ΔG batches as they arrive; graph + properties stay device-resident
+    # and the graph is prepared exactly once.
+    sess = prog.bind(csr, backend="jnp", capacity="auto")
+    sess.run("DynSSSP", src=0, batchSize=16)       # prologue: static SSSP
+    for batch in ups.batches(16):
+        sess.apply(batch)                          # incremental repair
+    assert np.array_equal(sess.props.host("dist"), dists["jnp"])
+    print("armed session (per-batch apply) matches the one-shot run ✓")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""repro — dynamic graph algorithms for multiple backends from one DSL.
+
+Public surface (see ``repro.api`` for the full story):
+
+    import repro
+
+    prog = repro.compile("path/to/algo.sp")
+    sess = prog.bind(csr, backend="pallas", capacity="auto")
+    res = sess.run("DynSSSP", updateBatch=stream, batchSize=16, src=0)
+
+Exports are lazy (PEP 562) so ``import repro`` stays cheap and free of
+import cycles; heavyweight backends only load when first used.
+"""
+
+__all__ = [
+    "api", "compile", "bind_graph", "CompiledProgram", "Session",
+    "GraphSession", "SessionResult", "PropertyView", "register_engine",
+    "available_backends",
+]
+
+_API_NAMES = {"compile", "bind_graph", "CompiledProgram", "Session",
+              "GraphSession", "SessionResult", "PropertyView",
+              "register_engine", "available_backends"}
+
+
+def __getattr__(name):
+    if name == "api":
+        import repro.api as api
+        return api
+    if name in _API_NAMES:
+        import repro.api as api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,23 @@
+"""Hand-staged dynamic graph algorithms (paper Figs. 19-21), written
+against the backend-neutral ``Engine`` interface.
+
+Every module follows one convention — drivers are
+``fn(engine, handle, ...)`` and return ``(new_handle, result)`` — which
+is exactly what ``repro.api.GraphSession.call`` adapts, so sessions
+keep the handle device-resident across hand-staged calls too:
+
+    sess = repro.bind_graph(csr, backend="jnp")
+    props = sess.call(sssp.dyn_sssp, 0, stream, batch_size=16)
+
+``STREAM_STEPS`` maps algorithm names to their engine-neutral per-batch
+stream steps (what ``Engine.run_stream`` lax.scans).
+"""
+from repro.algos import oracles, pagerank, sssp, triangles
+
+STREAM_STEPS = {
+    "sssp": sssp.stream_step,
+    "pagerank": pagerank.make_stream_step,   # factory: knobs -> step
+    "tc": triangles.stream_step,
+}
+
+__all__ = ["oracles", "pagerank", "sssp", "triangles", "STREAM_STEPS"]

@@ -1,0 +1,484 @@
+"""The stable public API: compile once, bind to any backend, keep graph
+state device-resident across calls.
+
+This is the contract the paper's DSL promises ("one program, N generated
+backends") surfaced as a first-class Python API — GraphIt's
+algorithm/schedule separation, StarPlat's resident Batch-loop driver:
+
+    import repro.api as api
+
+    prog = api.compile("src/repro/dsl_programs/sssp.sp")
+    sess = prog.bind(csr, backend="pallas", capacity="auto")
+
+    # one-shot, same semantics as the deprecated Program.run:
+    res = sess.run("DynSSSP", updateBatch=stream, batchSize=16, src=0)
+    res.props["dist"]          # device array — no host sync
+    res.to_host()["dist"]      # explicit numpy readback
+
+    # long-lived streaming consumer: omit the stream to arm the Batch
+    # loop, then feed ΔG batches as they arrive; graph + properties stay
+    # on device between calls and `engine.prepare` runs exactly once.
+    sess = prog.bind(csr, backend="jnp", capacity="auto")
+    sess.run("DynSSSP", src=0)
+    for batch in live_feed:
+        sess.apply(batch)
+        serve(sess.props["dist"])
+
+Backends are resolved by name through ``repro.core.registry``;
+``register_engine`` plugs new engines in without touching this facade.
+Hand-staged algorithms (``repro.algos``) ride the same session via
+``bind_graph`` — an algorithm-agnostic session owning the resident
+handle — and its ``call``/``run_stream`` helpers.
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.core.dsl.codegen import (ArmedRun, CodegenError, Program,
+                                    compile_source)
+from repro.core.engine import Engine
+from repro.core.registry import (available_backends, make_engine,
+                                 register_engine)
+from repro.graph.csr import CSR
+from repro.graph.updates import UpdateBatch, UpdateStream
+
+__all__ = [
+    "compile", "CompiledProgram", "Session", "GraphSession", "bind_graph",
+    "SessionResult", "PropertyView", "register_engine",
+    "available_backends",
+]
+
+_DEFAULT_CAPACITY = 64
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_cached(source_or_path: str, stamp) -> "CompiledProgram":
+    return CompiledProgram(compile_source(source_or_path))
+
+
+def compile(source_or_path: str) -> "CompiledProgram":
+    """Compile DSL text (or a path to a ``.sp`` file) once; the result
+    is cached per source (``.sp`` cache entries key on the file's
+    mtime, so on-disk edits recompile)."""
+    s = str(source_or_path)
+    stamp = None
+    if s.endswith(".sp"):
+        p = pathlib.Path(s)
+        if p.exists():
+            stamp = p.stat().st_mtime_ns
+    return _compile_cached(s, stamp)
+
+
+def bind_graph(csr: CSR, backend: str = "jnp",
+               capacity: Union[str, int] = "auto",
+               **backend_opts) -> "GraphSession":
+    """An algorithm-agnostic session (no DSL program): a device-resident
+    graph handle for hand-staged ``repro.algos`` code."""
+    return GraphSession(make_engine(backend, **backend_opts), csr, capacity)
+
+
+def _auto_capacity(stream: Optional[UpdateStream] = None,
+                   batch: Optional[UpdateBatch] = None) -> int:
+    """Diff-pool size derived from the bound stream/batch: every add may
+    land in the pool (deletes only tombstone), doubled for headroom.
+    With neither in sight — arming a Batch loop prepares the graph for
+    the prologue before any update exists — the pool starts at the
+    default.  The grow-on-overflow path backstops all underestimates."""
+    if stream is not None:
+        return max(16, 2 * stream.num_adds)
+    if batch is not None:
+        return max(_DEFAULT_CAPACITY, 8 * batch.size)
+    return _DEFAULT_CAPACITY
+
+
+class PropertyView(Mapping):
+    """Lazy view over a session's vertex properties.
+
+    Indexing returns the **device** array (padded; no host sync);
+    ``to_host()`` / ``host(name)`` perform the explicit numpy readback,
+    sliced to the real vertex count — the one place the API syncs."""
+
+    def __init__(self, arrays: Dict[str, Any], n_real: int):
+        self._arrays = arrays
+        self._n = n_real
+
+    def __getitem__(self, name: str):
+        return self._arrays[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._arrays)
+
+    def __len__(self) -> int:
+        return len(self._arrays)
+
+    def host(self, name: str) -> np.ndarray:
+        return np.asarray(self._arrays[name])[: self._n]
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        return {k: self.host(k) for k in self._arrays}
+
+    def __repr__(self):
+        return (f"PropertyView({sorted(self._arrays)}, "
+                f"n={self._n}, device-resident)")
+
+
+class SessionResult:
+    """What ``Session.run`` returns: device-resident props + the DSL
+    return value.  ``to_host()`` is the explicit sync point."""
+
+    def __init__(self, session: "GraphSession", props: PropertyView,
+                 value: Any = None):
+        self.session = session
+        self.props = props
+        self.value = value
+
+    @property
+    def graph(self):
+        return self.session.handle
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        return self.props.to_host()
+
+    def __repr__(self):
+        return (f"SessionResult(props={sorted(self.props)}, "
+                f"value={self.value!r})")
+
+
+class GraphSession:
+    """Owns one engine instance and its device-resident graph handle.
+
+    ``prepare`` runs exactly once per session — lazily, so
+    ``capacity='auto'`` can wait for the first stream/batch to size the
+    diff pool.  Structural updates, hand-staged drivers, and the fused
+    stream executor all route through here and keep the handle warm.
+    """
+
+    def __init__(self, engine: Engine, csr: CSR,
+                 capacity: Union[str, int] = "auto"):
+        if not (capacity == "auto" or isinstance(capacity, int)):
+            raise ValueError(f"capacity must be 'auto' or an int, "
+                             f"got {capacity!r}")
+        self._engine = engine
+        self._csr = csr
+        self._capacity = capacity
+        self._handle = None
+        self._props: Dict[str, Any] = {}
+
+    # -- resident state ------------------------------------------------------
+    @property
+    def engine(self) -> Engine:
+        return self._engine
+
+    @property
+    def backend(self) -> str:
+        return self._engine.name
+
+    @property
+    def handle(self):
+        """The device-resident graph handle (prepared on first access)."""
+        self._ensure_prepared()
+        return self._handle
+
+    @property
+    def prepared(self) -> bool:
+        return self._handle is not None
+
+    def _ensure_prepared(self, stream: Optional[UpdateStream] = None,
+                         batch: Optional[UpdateBatch] = None) -> None:
+        if self._handle is not None:
+            return
+        cap = self._capacity if isinstance(self._capacity, int) \
+            else _auto_capacity(stream, batch)
+        self._handle = self._engine.prepare(self._csr, diff_capacity=cap)
+
+    @property
+    def props(self) -> PropertyView:
+        """Current vertex properties, device-resident; ``.to_host()``
+        syncs explicitly.  Empty until the session has run something."""
+        if self._handle is None:
+            return PropertyView({}, 0)
+        return PropertyView(dict(self._props), self._engine.n_real)
+
+    def _overflow_count(self) -> int:
+        return int(np.asarray(
+            self._engine.handle_counters(self._handle))[0])
+
+    def _retry_on_overflow(self, attempt: Callable[[], None],
+                           regrow: Callable[[], None]) -> None:
+        """The one grow-on-overflow backstop: run ``attempt()`` (which
+        mutates session state); while it raised the overflow counter,
+        ``regrow()`` (roll back + grow the pool) and replay."""
+        of0 = self._overflow_count()
+        attempt()
+        while self._overflow_count() > of0:
+            regrow()
+            of0 = 0            # grow merges the pool, clearing counters
+            attempt()
+
+    # -- structural updates --------------------------------------------------
+    def apply(self, batch: UpdateBatch) -> "GraphSession":
+        """Apply one ΔG batch structurally (deletes then adds), growing
+        the diff pool and replaying on overflow."""
+        self._ensure_prepared(batch=batch)
+        base = self._handle
+
+        def attempt():
+            h = self._engine.update_del(base, batch)
+            self._handle = self._engine.update_add(h, batch)
+
+        def regrow():
+            nonlocal base
+            base = self._handle = self._engine.grow(base)
+
+        self._retry_on_overflow(attempt, regrow)
+        return self
+
+    # -- hand-staged drivers -------------------------------------------------
+    def call(self, fn: Callable, *args, **kwargs):
+        """Run a hand-staged driver ``fn(engine, handle, *args)`` (the
+        ``repro.algos`` convention).  A ``(new_handle, result)`` return
+        — recognized by the first element having the session's handle
+        type — is adopted into the session; anything else passes
+        through untouched."""
+        self._ensure_prepared()
+        base = self._handle
+        ret = {}
+
+        def attempt():
+            self._handle = base
+            out = fn(self._engine, base, *args, **kwargs)
+            if isinstance(out, tuple) and len(out) == 2 and \
+                    type(out[0]) is type(base):
+                self._handle, result = out
+                if isinstance(result, dict):
+                    self._props = dict(result)
+                ret["value"] = result
+            else:
+                ret["value"] = out
+
+        def regrow():
+            # the driver overflowed the pool: grow it and re-run the
+            # driver from the grown pre-call graph
+            nonlocal base
+            base = self._engine.grow(base)
+
+        self._retry_on_overflow(attempt, regrow)
+        return ret["value"]
+
+    def run_stream(self, stream: UpdateStream, batch_size: int,
+                   step_fn: Callable, carry, **kw):
+        """Drive a stream through the engine's fused executor
+        (``Engine.run_stream``); the updated handle stays resident and
+        the final carry is returned."""
+        self._ensure_prepared(stream=stream)
+        self._handle, carry = self._engine.run_stream(
+            self._handle, stream, batch_size, step_fn, carry, **kw)
+        if isinstance(carry, dict):
+            self._props = dict(carry)
+        return carry
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        return self.props.to_host()
+
+
+class Session(GraphSession):
+    """A CompiledProgram bound to one backend + one graph.
+
+    Two modes per DSL function:
+
+    * **one-shot** — ``run("DynSSSP", updateBatch=stream, ...)`` executes
+      the whole function (prologue, Batch loop over the given stream,
+      epilogue) against the resident handle; bit-identical to the
+      deprecated ``Program.run`` but with no re-prepare and no implicit
+      host readback.
+    * **armed** — omit the ``updates<g>`` argument and ``run`` executes
+      only the prologue (e.g. the static algorithm), leaving the Batch
+      loop armed: each ``apply(batch)`` then executes one loop body
+      against the live state, and ``run_stream(stream, batch_size)``
+      folds a whole stream through it.  N applies are bit-identical to
+      one one-shot run over the same N batches.
+    """
+
+    def __init__(self, compiled: "CompiledProgram", engine: Engine,
+                 csr: CSR, capacity: Union[str, int] = "auto"):
+        super().__init__(engine, csr, capacity)
+        self.compiled = compiled
+        self._armed: Optional[ArmedRun] = None
+        # binding caches the staged per-(func, engine) executables, so
+        # repeat calls skip host-side AST pattern interpretation
+        self._staged_funcs: Dict[str, Any] = {}
+
+    # -- DSL execution -------------------------------------------------------
+    def run(self, func: str, **args) -> SessionResult:
+        """Execute DSL function ``func`` against the resident graph.
+
+        Scalars and the update stream are passed by parameter name, as
+        keyword arguments.  If the function takes an ``updates<g>``
+        parameter and it is omitted (or None), the session arms the
+        Batch loop instead of running it (see class docstring)."""
+        program = self.compiled.program
+        fnode = program.ast.func(func)   # raises early on unknown names
+        upd_params = [p.name for p in fnode.params
+                      if p.type.name == "updates"]
+        streams = [args[p] for p in upd_params
+                   if args.get(p) is not None]
+        staged = self._staged_funcs.get(func)
+        if staged is None:
+            staged = self._staged_funcs[func] = program.stage(func,
+                                                              self._engine)
+        self._ensure_prepared(stream=streams[0] if streams else None)
+
+        if upd_params and not streams:
+            self._armed = staged.begin(self._handle, args)
+            self._handle = self._armed.gbox.value
+            self._props = self._armed.device_props()
+            return SessionResult(self, self.props, value=None)
+
+        base = self._handle
+        out = {}
+
+        def attempt():
+            g, props, ret = staged.call(base, args)
+            self._handle = g
+            out["props"], out["ret"] = props, ret
+
+        def regrow():
+            # adds were dropped: grow the pool and replay the whole run
+            # from the pre-run graph (same backstop as apply/run_stream)
+            nonlocal base
+            base = self._engine.grow(base)
+
+        self._retry_on_overflow(attempt, regrow)
+        # disarm only now: a run that raised (bad args, lowering error)
+        # must leave a previously armed loop intact
+        self._armed = None
+        self._props = out["props"]
+        return SessionResult(self, self.props, value=out["ret"])
+
+    @property
+    def armed(self) -> bool:
+        return self._armed is not None
+
+    def call(self, fn: Callable, *args, **kwargs):
+        out = super().call(fn, *args, **kwargs)
+        # a hand-staged driver advancing the handle would leave an armed
+        # frame's graph box stale (a later apply() would silently revert
+        # its updates) — successful hand-staged execution supersedes the
+        # armed loop; a driver that raised leaves it intact
+        self._armed = None
+        return out
+
+    @property
+    def value(self):
+        """The DSL return value as of the current state (armed sessions
+        evaluate the post-Batch epilogue without disturbing state)."""
+        if self._armed is not None:
+            return self._armed.value()
+        raise CodegenError("no armed function; use the SessionResult "
+                           "returned by run()")
+
+    # -- incremental updates -------------------------------------------------
+    def apply(self, batch: UpdateBatch) -> "Session":
+        """Feed one ΔG batch to the armed Batch loop (falling back to a
+        structural update when nothing is armed).  On diff-pool overflow
+        the state is rolled back, the pool grown, and the batch
+        replayed — so ``capacity='auto'`` underestimates are repaired,
+        not wrong."""
+        if self._armed is None:
+            super().apply(batch)
+            return self
+        if self._armed.returned:
+            return self    # a batch body returned: the Batch loop is
+        armed = self._armed    # over, exactly as in a one-shot run
+        snap = armed.snapshot()
+
+        def attempt():
+            armed.apply(batch)
+            self._handle = armed.gbox.value
+
+        def regrow():
+            nonlocal snap
+            armed.restore(snap)
+            armed.gbox.value = self._engine.grow(armed.gbox.value)
+            self._handle = armed.gbox.value
+            snap = armed.snapshot()
+
+        self._retry_on_overflow(attempt, regrow)
+        self._props = armed.device_props()
+        return self
+
+    def run_stream(self, stream: UpdateStream, batch_size: Optional[int] =
+                   None, step_fn: Optional[Callable] = None, carry=None,
+                   **kw):
+        """Armed sessions: fold a whole update stream through the armed
+        Batch loop, one ``apply`` per batch; returns a
+        :class:`SessionResult`.  With an explicit ``step_fn`` this
+        instead delegates to the engine's fused executor (the
+        GraphSession/hand-staged path) and returns the final carry,
+        not a SessionResult."""
+        if step_fn is not None:
+            out = super().run_stream(stream, batch_size, step_fn, carry,
+                                     **kw)
+            # successful hand-staged streaming supersedes any armed DSL
+            # loop: the armed frame's graph box would otherwise go stale
+            # and a later apply() would silently revert these updates
+            self._armed = None
+            return out
+        if self._armed is None:
+            raise CodegenError("run_stream without step_fn needs an armed "
+                               "function; call run(func, ...) without its "
+                               "updates argument first")
+        if carry is not None or kw:
+            raise TypeError(
+                f"run_stream on an armed session takes only (stream, "
+                f"batch_size); carry/{sorted(kw)} belong to the step_fn "
+                f"(hand-staged) path")
+        bs = batch_size
+        if bs is None:
+            # the batchSize the function was armed with, if any
+            try:
+                bs = self._armed.frame.lookup(
+                    self._armed.batch_stmt.batch_size)
+            except CodegenError:
+                bs = None
+        if bs is None:
+            raise CodegenError("no batch size: pass run_stream(..., "
+                               "batch_size=N) or batchSize= at arm time")
+        self._ensure_prepared(stream=stream)
+        for batch in stream.batches(int(bs)):
+            if self._armed.returned:
+                break            # a batch body returned: stop, like the
+            self.apply(batch)    # one-shot Batch loop does
+        return SessionResult(self, self.props, value=self._armed.value())
+
+
+class CompiledProgram:
+    """A compiled DSL program, backend-agnostic; ``bind`` picks the
+    backend by registry name and yields a :class:`Session`."""
+
+    def __init__(self, program: Program):
+        self.program = program
+
+    @property
+    def functions(self):
+        """Names of the functions this program defines."""
+        return [f.name for f in self.program.ast.funcs]
+
+    def bind(self, csr: CSR, backend: str = "jnp",
+             capacity: Union[str, int] = "auto",
+             **backend_opts) -> Session:
+        """Bind to a graph on a named backend.  ``capacity`` sizes the
+        diff-CSR pool: an int is explicit; ``"auto"`` derives it from
+        the stream of the first one-shot run (armed sessions prepare
+        for the prologue before any update exists, so they start at the
+        default size), with grow-on-overflow as the backstop either
+        way."""
+        return Session(self, make_engine(backend, **backend_opts), csr,
+                       capacity)
+
+    def __repr__(self):
+        return f"CompiledProgram(functions={self.functions})"

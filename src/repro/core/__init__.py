@@ -1,3 +1,52 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""repro.core — the paper's compiler + backends.
+
+The DSL pipeline lives in ``repro.core.dsl`` (lexer → parser → analysis
+→ codegen), the execution engines in ``repro.core.engine`` /
+``dist`` / ``pallas_engine`` / ``frontier_engine``, and the string-keyed
+backend registry in ``repro.core.registry``.
+
+Public names re-export lazily (PEP 562) to keep imports cheap and
+cycle-free — ``DistEngine``'s shard_map machinery, for instance, only
+loads on first touch.
+"""
+
+__all__ = [
+    "Engine", "JnpEngine", "DistEngine", "PallasEngine", "FrontierEngine",
+    "Program", "compile_source", "register_engine", "make_engine",
+    "engine_factory", "available_backends", "UnknownBackendError",
+    "DuplicateBackendError", "registry",
+]
+
+_LAZY = {
+    "Engine": ("repro.core.engine", "Engine"),
+    "JnpEngine": ("repro.core.engine", "JnpEngine"),
+    "DistEngine": ("repro.core.dist", "DistEngine"),
+    "PallasEngine": ("repro.core.pallas_engine", "PallasEngine"),
+    "FrontierEngine": ("repro.core.frontier_engine", "FrontierEngine"),
+    "Program": ("repro.core.dsl.codegen", "Program"),
+    "compile_source": ("repro.core.dsl.codegen", "compile_source"),
+    "register_engine": ("repro.core.registry", "register_engine"),
+    "make_engine": ("repro.core.registry", "make_engine"),
+    "engine_factory": ("repro.core.registry", "engine_factory"),
+    "available_backends": ("repro.core.registry", "available_backends"),
+    "UnknownBackendError": ("repro.core.registry", "UnknownBackendError"),
+    "DuplicateBackendError": ("repro.core.registry",
+                              "DuplicateBackendError"),
+}
+
+
+def __getattr__(name):
+    if name == "registry":
+        import repro.core.registry as registry
+        return registry
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.core' has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(__all__)

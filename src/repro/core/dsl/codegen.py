@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -228,7 +229,15 @@ def _binop(op: str, a, b):
 # ===========================================================================
 
 class Program:
-    """A compiled DSL program; run any function on any engine."""
+    """A compiled DSL program; run any function on any engine.
+
+    ``stage(func, engine)`` is the bind-time half: it builds (and caches,
+    per engine instance) a :class:`StagedFunc` holding the executor and
+    its lowering caches, so repeat calls skip host-side AST
+    pattern-matching and reuse the engine's jitted executables.
+    ``Program.run`` remains as a deprecated one-shot shim over it — new
+    code should go through :mod:`repro.api` sessions.
+    """
 
     def __init__(self, source: str):
         self.source = source
@@ -236,21 +245,62 @@ class Program:
         self.infos = analyze(self.ast)
 
     # -- public API ----------------------------------------------------------
+    def stage(self, func_name: str, engine: Engine) -> "StagedFunc":
+        """Bind ``func_name`` to ``engine``: returns a fresh executable
+        wrapper.  Callers that want the bind-time caches to pay off
+        (``repro.api.Session``) hold on to it — a StagedFunc references
+        its engine, so its lifetime is the owner's, not the Program's."""
+        return StagedFunc(self, func_name, engine)
+
     def run(self, func_name: str, engine: Engine, csr: CSR,
             args: Optional[Dict[str, Any]] = None,
             diff_capacity: int = 64) -> RunResult:
-        """Execute ``func_name`` with graph ``csr`` on ``engine``.
+        """Deprecated one-shot execution (prepare + run + host readback).
 
-        ``args`` supplies scalars (by param name) and the UpdateStream for
-        ``updates<g>`` params.  propNode/propEdge params are allocated by
-        the program (attachNodeProperty) and returned in the result.
+        Kept as a thin shim over :meth:`stage` for existing callers; use
+        ``repro.api.compile(...).bind(...)`` instead — a Session keeps
+        the graph device-resident across calls, while this shim
+        re-``prepare``s the graph and syncs every property to host numpy
+        on each invocation.
         """
-        args = dict(args or {})
-        func = self.ast.func(func_name)
+        warnings.warn(
+            "Program.run is deprecated; use repro.api.compile(...)"
+            ".bind(csr, backend=...) sessions instead",
+            DeprecationWarning, stacklevel=2)
         g = engine.prepare(csr, diff_capacity=diff_capacity)
-        frame = Frame(engine)
+        g, props, ret = self.stage(func_name, engine).call(g, args)
+        host = {k: np.asarray(v)[: engine.n_real] for k, v in props.items()}
+        return RunResult(g=g, props=host, value=ret)
+
+
+class StagedFunc:
+    """One DSL function bound to one engine instance.
+
+    The split mirrors what the paper's generated C++ gets for free from
+    compilation: everything derivable from the AST alone (parameter
+    binding plan, forall classification, edge-sweep plans) is computed
+    once here and cached on the executor; per-call work is only the
+    actual staged execution against a graph handle.
+    """
+
+    def __init__(self, program: Program, func_name: str, engine: Engine):
+        self.program = program
+        self.func_name = func_name
+        self.func = program.ast.func(func_name)
+        self.engine = engine
+        self.executor = Executor(program, engine)
+        # params an *armed* run may omit: the update stream itself plus
+        # the batch-size names the (bypassed) Batch statements read
+        self._armable = {st.batch_size for st in A.walk(self.func.body)
+                         if isinstance(st, A.BatchStmt)}
+
+    # -- parameter binding ---------------------------------------------------
+    def bind_frame(self, g, args: Optional[Dict[str, Any]],
+                   armed: bool = False) -> Tuple["Frame", Box]:
+        args = dict(args or {})
+        frame = Frame(self.engine)
         gbox = Box(g)
-        for p in func.params:
+        for p in self.func.params:
             t = p.type
             if t.name == "Graph":
                 frame.env[p.name] = GraphRef(gbox)
@@ -258,17 +308,134 @@ class Program:
                 frame.env[p.name] = PropRef(
                     p.name, _elem(t), Box(None), is_edge=t.name == "propEdge")
             elif t.name == "updates":
-                frame.env[p.name] = UpdatesRef(args.pop(p.name))
-            else:
+                stream = args.pop(p.name, None)
+                if isinstance(stream, UpdatesRef):
+                    frame.env[p.name] = stream
+                else:
+                    frame.env[p.name] = UpdatesRef(stream)
+                if stream is None and not armed:
+                    raise CodegenError(
+                        f"{self.func_name}: missing updates arg {p.name!r}")
+            elif p.name in args:
                 frame.env[p.name] = args.pop(p.name)
+            elif armed and p.name in self._armable:
+                frame.env[p.name] = None
+            else:
+                raise CodegenError(
+                    f"{self.func_name}: missing arg {p.name!r}")
         if args:
             raise CodegenError(f"unused args: {sorted(args)}")
-        ex = Executor(self, engine)
-        ex.exec_block(func.body, frame)
-        props = {k: np.asarray(v.box.value)[: engine.n_real]
-                 for k, v in frame.node_props().items()
-                 if v.box.value is not None}
-        return RunResult(g=gbox.value, props=props, value=frame.ret)
+        return frame, gbox
+
+    # -- call-time execution -------------------------------------------------
+    def call(self, g, args: Optional[Dict[str, Any]] = None):
+        """One-shot execution against an existing handle ``g``; returns
+        ``(new_handle, device_props, return_value)`` — no host syncs."""
+        frame, gbox = self.bind_frame(g, args)
+        self.executor.exec_block(self.func.body, frame)
+        return gbox.value, frame.props_arrays(), frame.ret
+
+    def begin(self, g, args: Optional[Dict[str, Any]] = None) -> "ArmedRun":
+        """Incremental execution: run the prologue (everything before the
+        ``Batch`` statement), then hand back an :class:`ArmedRun` whose
+        ``apply(batch)`` executes the Batch body one ΔG batch at a time
+        against the live frame — the long-lived streaming-consumer mode.
+        """
+        frame, gbox = self.bind_frame(g, args, armed=True)
+        stmts = self.func.body.stmts
+        batch_idx = next((i for i, s in enumerate(stmts)
+                          if isinstance(s, A.BatchStmt)), None)
+        if batch_idx is None:
+            raise CodegenError(
+                f"{self.func_name} has no Batch statement; use call()")
+        for st in stmts[:batch_idx]:
+            if frame.ret is not None:
+                break
+            self.executor.exec_stmt(st, frame)
+        return ArmedRun(self, frame, gbox, stmts[batch_idx],
+                        stmts[batch_idx + 1:])
+
+
+class ArmedRun:
+    """A Dyn* function paused at its ``Batch`` loop, state held live.
+
+    ``apply`` replays exactly what ``Executor.exec_batch`` does for one
+    batch, so N applies are bit-identical to a one-shot run over the
+    same N batches.  ``snapshot``/``restore`` save and roll back every
+    mutable cell (graph box, property boxes, host scalars) — the
+    grow-on-overflow backstop in ``repro.api.Session`` uses them to
+    replay a batch after growing the diff pool.
+    """
+
+    def __init__(self, staged: StagedFunc, frame: "Frame", gbox: Box,
+                 batch_stmt: A.BatchStmt, epilogue: List[A.Stmt]):
+        self.staged = staged
+        self.frame = frame
+        self.gbox = gbox
+        self.batch_stmt = batch_stmt
+        self.epilogue = epilogue
+
+    @property
+    def returned(self) -> bool:
+        """True once a batch body hit a ``return`` — the Batch loop is
+        over, exactly as ``exec_batch`` would have stopped it."""
+        return self.frame.ret is not None
+
+    def apply(self, batch: UpdateBatch) -> None:
+        if self.returned:
+            raise CodegenError(f"{self.staged.func_name} already returned; "
+                               f"no further batches can be applied")
+        inner = Frame(self.staged.engine, parent=self.frame)
+        inner.current_batch = batch
+        self.staged.executor.exec_block(self.batch_stmt.body, inner)
+        if inner.ret is not None:
+            self.frame.ret = inner.ret
+
+    def value(self):
+        """The function's return value as of the current state.  The
+        post-Batch epilogue is evaluated under a snapshot/restore, so
+        reading it never disturbs the live state — even for epilogues
+        with assignments or property writes."""
+        if self.frame.ret is not None:
+            return self.frame.ret
+        if not self.epilogue:
+            return None
+        snap = self.snapshot()
+        try:
+            child = Frame(self.staged.engine, parent=self.frame)
+            for st in self.epilogue:
+                if child.ret is not None:
+                    break
+                self.staged.executor.exec_stmt(st, child)
+            return child.ret
+        finally:
+            self.restore(snap)
+
+    def device_props(self) -> Dict[str, Any]:
+        return self.frame.props_arrays()
+
+    # -- rollback support ----------------------------------------------------
+    def snapshot(self):
+        boxes = {}
+        f: Optional[Frame] = self.frame
+        envs = []
+        while f is not None:
+            envs.append((f, dict(f.env)))
+            for v in f.env.values():
+                if isinstance(v, PropRef):
+                    boxes[v.box] = v.box.value
+            f = f.parent
+        return envs, boxes, self.gbox.value, self.frame.ret
+
+    def restore(self, snap) -> None:
+        envs, boxes, g, ret = snap
+        for f, env in envs:
+            f.env.clear()
+            f.env.update(env)
+        for box, val in boxes.items():
+            box.value = val
+        self.gbox.value = g
+        self.frame.ret = ret
 
 
 def _elem(t: A.Type) -> str:
@@ -292,6 +459,19 @@ class Executor:
     def __init__(self, prog: Program, engine: Engine):
         self.prog = prog
         self.engine = engine
+        # bind-time lowering cache: AST-only analyses (forall
+        # classification, edge-sweep plans, wedge shapes) keyed on node
+        # identity — repeat calls through one StagedFunc skip the
+        # pattern-matching interpretation entirely.
+        self.stage_cache: Dict[Any, Any] = {}
+
+    def staged(self, key, build: Callable[[], Any]):
+        """Memoize an AST-only lowering artifact under ``key``."""
+        try:
+            return self.stage_cache[key]
+        except KeyError:
+            val = self.stage_cache[key] = build()
+            return val
 
     # -- blocks / statements --------------------------------------------------
     def exec_block(self, block: A.Block, frame: Frame):

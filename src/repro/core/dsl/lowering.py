@@ -815,7 +815,9 @@ def run_loop(ex, stmts: List[A.Stmt], frame, kind: str,
             and isinstance(cond.operand, A.Name):
         flag_name = cond.operand.ident
 
-    kinds = [classify_forall(ex, fa, frame) for fa in foralls]
+    kinds = [ex.staged(("kind", id(fa)),
+                       lambda fa=fa: classify_forall(ex, fa, frame))
+             for fa in foralls]
     core_idx = kinds.index("edge") if "edge" in kinds else 0
     core = foralls[core_idx]
     core_kind = kinds[core_idx]
@@ -843,7 +845,8 @@ def run_loop(ex, stmts: List[A.Stmt], frame, kind: str,
         _run_vertex_loop(ex, core, frame, flag_name, extra)
         return
 
-    plan = plan_edge_sweep(ex, core, frame, flag_name)
+    plan = ex.staged(("plan", id(core), flag_name),
+                     lambda: plan_edge_sweep(ex, core, frame, flag_name))
     sweep, has_changed = build_edge_sweep(ex, plan, frame,
                                           track_changed=kind == "while")
 
@@ -1001,7 +1004,8 @@ def _stage_post_items(ex, items: List[A.Stmt], frame) -> List[Callable]:
 
 def run_forall(ex, fa: A.ForAll, frame):
     engine = ex.engine
-    kind = classify_forall(ex, fa, frame)
+    kind = ex.staged(("kind", id(fa)),
+                     lambda: classify_forall(ex, fa, frame))
     if kind == "vertex":
         extra = {}
         if _needs_outdeg(fa):
@@ -1017,7 +1021,9 @@ def run_forall(ex, fa: A.ForAll, frame):
         if _needs_outdeg(fa):
             extra["_outdeg"] = engine.out_degrees(
                 frame.graph().box.value).astype(F32)
-        plan = plan_edge_sweep(ex, fa, frame, flag_name=None)
+        plan = ex.staged(("plan", id(fa), None),
+                         lambda: plan_edge_sweep(ex, fa, frame,
+                                                 flag_name=None))
         sweep, _ = build_edge_sweep(ex, plan, frame, track_changed=False)
         props = _gather_props(ex, frame, extra)
         props = engine.sweep(frame.graph().box.value, sweep, props)
@@ -1109,7 +1115,8 @@ def run_wedge(ex, fa: A.ForAll, frame, kind: str):
     engine = ex.engine
     import repro.core.dsl.codegen as CG
     g = frame.graph().box.value
-    accum_names = _accum_targets(fa, frame)
+    accum_names = ex.staged(("wedge_accums", id(fa)),
+                            lambda: _accum_targets(fa, frame))
     if not accum_names:
         raise LowerError(f"line {fa.line}: wedge loop without counters")
 
@@ -1124,14 +1131,17 @@ def run_wedge(ex, fa: A.ForAll, frame, kind: str):
         f = f.parent
 
     if kind == "wedge_static":
-        inner1 = next(s for s in fa.body.stmts if isinstance(s, A.ForAll))
-        inner2 = next(s for s in inner1.body.stmts
-                      if isinstance(s, A.ForAll))
-        bindings = {fa.var: "x", inner1.var: "y", inner2.var: "z"}
-        filters = [e for e in (inner1.filter, inner2.filter)
-                   if e is not None]
-        body = inner2.body.stmts
-        pre: List[A.Stmt] = []
+        def _shape_static():
+            inner1 = next(s for s in fa.body.stmts
+                          if isinstance(s, A.ForAll))
+            inner2 = next(s for s in inner1.body.stmts
+                          if isinstance(s, A.ForAll))
+            bindings = {fa.var: "x", inner1.var: "y", inner2.var: "z"}
+            filters = [e for e in (inner1.filter, inner2.filter)
+                       if e is not None]
+            return bindings, filters, inner2.body.stmts
+        bindings, filters, body = ex.staged(("wedge", id(fa)),
+                                            _shape_static)
     else:
         # batch iteration: v1 = u.source; v2 = u.destination; forall v3 ...
         ups = _iter_info(ex, fa.iter, frame)[1]
@@ -1152,19 +1162,23 @@ def run_wedge(ex, fa: A.ForAll, frame, kind: str):
                 g, batch.del_src, batch.del_dst, batch.del_mask)
             it_flags = fa_ | fd_
         lane_flags["_iter"] = it_flags
-        inner1 = next(s for s in fa.body.stmts if isinstance(s, A.ForAll))
-        bindings = {fa.var: None, inner1.var: "z"}
-        # resolve v1/v2 decls
-        for st in fa.body.stmts:
-            if isinstance(st, A.Decl) and st.type.name == "node" and \
-                    isinstance(st.init, A.Attr):
-                if st.init.name == "source":
-                    bindings[st.name] = "x"
-                elif st.init.name == "destination":
-                    bindings[st.name] = "y"
-        filters = [inner1.filter] if inner1.filter is not None else []
-        body = inner1.body.stmts
-        pre = []
+
+        def _shape_batch():
+            inner1 = next(s for s in fa.body.stmts
+                          if isinstance(s, A.ForAll))
+            bindings = {fa.var: None, inner1.var: "z"}
+            # resolve v1/v2 decls
+            for st in fa.body.stmts:
+                if isinstance(st, A.Decl) and st.type.name == "node" and \
+                        isinstance(st.init, A.Attr):
+                    if st.init.name == "source":
+                        bindings[st.name] = "x"
+                    elif st.init.name == "destination":
+                        bindings[st.name] = "y"
+            filters = [inner1.filter] if inner1.filter is not None else []
+            return bindings, filters, inner1.body.stmts
+        bindings, filters, body = ex.staged(("wedge", id(fa)),
+                                            _shape_batch)
 
     def pair_fn(x, y, z, z_ok, wctx):
         ctx = WedgeVecCtx(ex, frame, wctx, bindings, lane_flags,

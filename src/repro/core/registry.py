@@ -1,0 +1,98 @@
+"""String-keyed engine registry: the paper's "choose a backend" knob.
+
+The public API (``repro.api``) never imports engine classes; it resolves
+backends by name here, so a new engine plugs in without touching the
+facade:
+
+    from repro.core.registry import register_engine
+
+    register_engine("mybackend", MyEngine)          # a class, or
+    register_engine("tuned", lambda: PallasEngine(k=16))   # any factory
+
+Built-in backends are registered lazily (by module path) so importing
+the registry stays cheap and free of import cycles — ``DistEngine``'s
+shard_map machinery, for instance, only loads when somebody actually
+binds ``backend="dist"``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.core.engine import Engine
+
+EngineFactory = Callable[..., Engine]
+
+
+class UnknownBackendError(KeyError):
+    """Raised when a backend name is not registered."""
+
+    def __str__(self):  # KeyError repr-quotes its message; keep it readable
+        return self.args[0] if self.args else ""
+
+
+class DuplicateBackendError(ValueError):
+    """Raised when a backend name is registered twice without overwrite."""
+
+
+# name -> "module:Class" for built-ins, resolved (and cached) on demand
+_BUILTIN_PATHS: Dict[str, str] = {
+    "jnp": "repro.core.engine:JnpEngine",
+    "dist": "repro.core.dist:DistEngine",
+    "pallas": "repro.core.pallas_engine:PallasEngine",
+    "frontier": "repro.core.frontier_engine:FrontierEngine",
+}
+
+_FACTORIES: Dict[str, EngineFactory] = {}
+
+
+def _resolve_builtin(name: str) -> EngineFactory:
+    mod_name, cls_name = _BUILTIN_PATHS[name].split(":")
+    cls = getattr(importlib.import_module(mod_name), cls_name)
+    _FACTORIES[name] = cls
+    return cls
+
+
+def register_engine(name: str, factory: EngineFactory, *,
+                    overwrite: bool = False) -> None:
+    """Register ``factory`` (an Engine subclass or zero/kw-arg callable
+    returning an Engine) under ``name`` for ``bind(backend=name)``."""
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"backend name must be a non-empty string, "
+                         f"got {name!r}")
+    if not callable(factory):
+        raise TypeError(f"engine factory for {name!r} must be callable")
+    taken = name in _FACTORIES or name in _BUILTIN_PATHS
+    if taken and not overwrite:
+        raise DuplicateBackendError(
+            f"backend {name!r} is already registered "
+            f"(pass overwrite=True to replace it)")
+    _FACTORIES[name] = factory
+
+
+def unregister_engine(name: str) -> None:
+    """Remove a registered backend (built-ins revert to their default)."""
+    _FACTORIES.pop(name, None)
+
+
+def engine_factory(name: str) -> EngineFactory:
+    """The factory registered under ``name`` (resolving built-ins)."""
+    try:
+        return _FACTORIES[name]
+    except KeyError:
+        pass
+    if name in _BUILTIN_PATHS:
+        return _resolve_builtin(name)
+    raise UnknownBackendError(
+        f"unknown backend {name!r}; available: "
+        f"{', '.join(available_backends())}")
+
+
+def make_engine(name: str, **options) -> Engine:
+    """Instantiate a backend by name, e.g. ``make_engine('pallas', k=16)``."""
+    return engine_factory(name)(**options)
+
+
+def available_backends() -> List[str]:
+    """Sorted names of every registered backend."""
+    return sorted(set(_BUILTIN_PATHS) | set(_FACTORIES))

@@ -3,10 +3,11 @@ turned into an executable, seedable test matrix.
 
 A :class:`Scenario` fixes (graph, update stream, batch size); the
 ``assert_*`` runners drive a compiled ``src/repro/dsl_programs/*.sp``
-program through the full lexer→parser→analysis→codegen pipeline on a
-chosen engine and require a three-way agreement:
+program through the public API (``repro.api.compile(...).bind(...)``)
+on a chosen backend name and require a four-way agreement:
 
-    DSL-compiled output  ==  repro.algos.oracles (from-scratch numpy)
+    api Session output   ==  deprecated Program.run shim (bit-exact)
+                         ==  repro.algos.oracles (from-scratch numpy)
                          ==  hand-staged repro.algos.{sssp,pagerank,triangles}
 
 Scenarios deliberately cover the degenerate shapes the paper's
@@ -17,17 +18,22 @@ streams (same batch and across batches), and batch sizes 1 / 8 / 64.
 Every future engine or kernel PR must keep this matrix green; to add an
 algorithm, compile its ``.sp`` program, add an ``assert_<algo>`` runner
 against its oracle, and register scenarios below (see ROADMAP.md).
+Backends are addressed by registry name ('jnp' | 'dist' | 'pallas' |
+'frontier'), so a newly registered engine joins the matrix by adding
+its name to the lists in test_conformance.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import numpy as np
 
+import repro.api as api
+from repro.core.registry import make_engine
 from repro.graph import build_csr, random_updates
 from repro.graph.updates import UpdateStream
-from repro.core.dsl import compile_source
 from repro.dsl_programs import path as program_path
 from repro.algos import oracles
 from repro.algos import sssp as hand_sssp
@@ -35,10 +41,17 @@ from repro.algos import pagerank as hand_pr
 from repro.algos import triangles as hand_tc
 
 
-@functools.lru_cache(maxsize=None)
-def program(name: str):
-    """Compile (and cache) one of the shipped .sp programs."""
-    return compile_source(program_path(name))
+def program(name: str) -> api.CompiledProgram:
+    """Compile one of the shipped .sp programs (cached in api.compile)."""
+    return api.compile(program_path(name))
+
+
+def _shim_run(name: str, func: str, backend: str, csr, args, capacity):
+    """The deprecated Program.run path, for the bit-exact cross-check."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return program(name).program.run(func, make_engine(backend), csr,
+                                         args=args, diff_capacity=capacity)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,124 +244,145 @@ def _fresh_sym_pair(n, edges, seed):
 
 
 # ---------------------------------------------------------------------------
-# Differential runners: DSL == oracle == hand-staged
+# Differential runners: api Session == shim == oracle == hand-staged
 # ---------------------------------------------------------------------------
 
-def assert_sssp(engine_cls, sc: Scenario):
+def assert_sssp(backend: str, sc: Scenario):
     csr = build_csr(sc.n, sc.edges, sc.w)
-    res = program("sssp").run(
-        "DynSSSP", engine_cls(), csr,
-        args={"updateBatch": sc.stream, "batchSize": sc.batch_size,
-              "src": sc.src},
-        diff_capacity=sc.diff_capacity)
+    args = {"updateBatch": sc.stream, "batchSize": sc.batch_size,
+            "src": sc.src}
+    sess = program("sssp").bind(csr, backend=backend,
+                                capacity=sc.diff_capacity)
+    res = sess.run("DynSSSP", **args)
+    dist = res.props.host("dist")
+
+    shim = _shim_run("sssp", "DynSSSP", backend, csr, args,
+                     sc.diff_capacity)
+    np.testing.assert_array_equal(
+        dist, shim.props["dist"],
+        err_msg=f"[{sc.name}] session DynSSSP != Program.run shim")
+
     e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                          sc.stream.adds, sc.stream.dels)
     ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
-    got = np.minimum(res.props["dist"].astype(np.int64), oracles.INF)
+    got = np.minimum(dist.astype(np.int64), oracles.INF)
     np.testing.assert_array_equal(
         got, ref, err_msg=f"[{sc.name}] DSL DynSSSP != oracle")
 
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, props = hand_sssp.dyn_sssp(eng, g, sc.src, sc.stream, sc.batch_size)
-    hand = np.minimum(np.asarray(props["dist"])[: sc.n].astype(np.int64),
+    gsess = api.bind_graph(csr, backend=backend,
+                           capacity=sc.diff_capacity)
+    gsess.call(hand_sssp.dyn_sssp, sc.src, sc.stream, sc.batch_size)
+    hand = np.minimum(gsess.props.host("dist").astype(np.int64),
                       oracles.INF)
     np.testing.assert_array_equal(
         hand, ref, err_msg=f"[{sc.name}] hand-staged dyn_sssp != oracle")
 
 
-def assert_pagerank(engine_cls, sc: Scenario, beta=1e-4, delta=0.85,
+def assert_pagerank(backend: str, sc: Scenario, beta=1e-4, delta=0.85,
                     max_iter=100, rtol=5e-2, atol=1e-4):
     # beta is tighter than the paper's 1e-3 so per-batch convergence
     # slack (≈ beta/(1-delta) per recompute) stays well inside rtol even
     # for batchSize=1 streams.
     csr = build_csr(sc.n, sc.edges, sc.w)
-    res = program("pagerank").run(
-        "DynPR", engine_cls(), csr,
-        args={"updateBatch": sc.stream, "batchSize": sc.batch_size,
-              "beta": beta, "delta": delta, "maxIter": max_iter},
-        diff_capacity=sc.diff_capacity)
+    args = {"updateBatch": sc.stream, "batchSize": sc.batch_size,
+            "beta": beta, "delta": delta, "maxIter": max_iter}
+    sess = program("pagerank").bind(csr, backend=backend,
+                                    capacity=sc.diff_capacity)
+    res = sess.run("DynPR", **args)
+    pr = res.props.host("pageRank")
+
+    shim = _shim_run("pagerank", "DynPR", backend, csr, args,
+                     sc.diff_capacity)
+    np.testing.assert_array_equal(
+        pr, shim.props["pageRank"],
+        err_msg=f"[{sc.name}] session DynPR != Program.run shim")
+
     e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                         sc.stream.adds, sc.stream.dels)
     ref = oracles.pagerank_oracle(sc.n, e2, beta=beta, delta=delta,
                                   max_iter=max_iter)
     np.testing.assert_allclose(
-        res.props["pageRank"], ref, rtol=rtol, atol=atol,
+        pr, ref, rtol=rtol, atol=atol,
         err_msg=f"[{sc.name}] DSL DynPR != oracle")
 
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, props = hand_pr.dyn_pr(eng, g, sc.stream, sc.batch_size, beta=beta,
-                              delta=delta, max_iter=max_iter)
+    gsess = api.bind_graph(csr, backend=backend,
+                           capacity=sc.diff_capacity)
+    gsess.call(hand_pr.dyn_pr, sc.stream, sc.batch_size, beta=beta,
+               delta=delta, max_iter=max_iter)
     np.testing.assert_allclose(
-        np.asarray(props["pr"])[: sc.n], ref, rtol=rtol, atol=atol,
+        gsess.props.host("pr"), ref, rtol=rtol, atol=atol,
         err_msg=f"[{sc.name}] hand-staged dyn_pr != oracle")
 
 
-def assert_sssp_stream(engine_cls, sc: Scenario, segment_size: int = 4):
-    """Streaming-executor cell: run_stream(batches) must stay
-    oracle-exact — same contract as the per-batch dispatch path."""
+def assert_sssp_stream(backend: str, sc: Scenario, segment_size: int = 4):
+    """Streaming-executor cell: GraphSession.run_stream (the fused
+    engine executor) must stay oracle-exact — same contract as the
+    per-batch dispatch path."""
     csr = build_csr(sc.n, sc.edges, sc.w)
     e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                          sc.stream.adds, sc.stream.dels)
     ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, props = hand_sssp.dyn_sssp_stream(eng, g, sc.src, sc.stream,
-                                         sc.batch_size,
-                                         segment_size=segment_size)
-    got = np.minimum(np.asarray(props["dist"])[: sc.n].astype(np.int64),
+    sess = api.bind_graph(csr, backend=backend, capacity=sc.diff_capacity)
+    props0 = sess.call(hand_sssp.static_sssp, sc.src)
+    props = sess.run_stream(sc.stream, sc.batch_size,
+                            hand_sssp.stream_step, props0,
+                            segment_size=segment_size)
+    got = np.minimum(sess.props.host("dist").astype(np.int64),
                      oracles.INF)
     np.testing.assert_array_equal(
-        got, ref, err_msg=f"[{sc.name}] dyn_sssp_stream != oracle")
+        got, ref, err_msg=f"[{sc.name}] session sssp run_stream != oracle")
 
 
-def assert_pagerank_stream(engine_cls, sc: Scenario, beta=1e-4, delta=0.85,
-                           max_iter=100, rtol=5e-2, atol=1e-4,
+def assert_pagerank_stream(backend: str, sc: Scenario, beta=1e-4,
+                           delta=0.85, max_iter=100, rtol=5e-2, atol=1e-4,
                            segment_size: int = 4):
     csr = build_csr(sc.n, sc.edges, sc.w)
     e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                         sc.stream.adds, sc.stream.dels)
     ref = oracles.pagerank_oracle(sc.n, e2, beta=beta, delta=delta,
                                   max_iter=max_iter)
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, props = hand_pr.dyn_pr_stream(eng, g, sc.stream, sc.batch_size,
-                                     beta=beta, delta=delta,
-                                     max_iter=max_iter,
-                                     segment_size=segment_size)
+    sess = api.bind_graph(csr, backend=backend, capacity=sc.diff_capacity)
+    props0 = sess.call(hand_pr.static_pr, beta, delta, max_iter)
+    step = hand_pr.make_stream_step(beta, delta, max_iter)
+    sess.run_stream(sc.stream, sc.batch_size, step, props0,
+                    segment_size=segment_size)
     np.testing.assert_allclose(
-        np.asarray(props["pr"])[: sc.n], ref, rtol=rtol, atol=atol,
-        err_msg=f"[{sc.name}] dyn_pr_stream != oracle")
+        sess.props.host("pr"), ref, rtol=rtol, atol=atol,
+        err_msg=f"[{sc.name}] session pr run_stream != oracle")
 
 
-def assert_tc_stream(engine_cls, sc: Scenario, segment_size: int = 4):
+def assert_tc_stream(backend: str, sc: Scenario, segment_size: int = 4):
+    import jax.numpy as jnp
     csr = build_csr(sc.n, sc.edges, sc.w)
     e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                         sc.stream.adds, sc.stream.dels)
     ref = oracles.tc_oracle(sc.n, e2)
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, count = hand_tc.dyn_tc_stream(eng, g, sc.stream, sc.batch_size,
-                                     segment_size=segment_size)
+    sess = api.bind_graph(csr, backend=backend, capacity=sc.diff_capacity)
+    count0 = jnp.asarray(sess.call(hand_tc.static_tc), jnp.int32)
+    count = sess.run_stream(sc.stream, sc.batch_size,
+                            hand_tc.stream_step, count0,
+                            segment_size=segment_size)
     assert int(count) == ref, \
-        f"[{sc.name}] dyn_tc_stream {int(count)} != oracle {ref}"
+        f"[{sc.name}] session tc run_stream {int(count)} != oracle {ref}"
 
 
-def assert_tc(engine_cls, sc: Scenario):
+def assert_tc(backend: str, sc: Scenario):
     csr = build_csr(sc.n, sc.edges, sc.w)
-    res = program("tc").run(
-        "DynTC", engine_cls(), csr,
-        args={"updateBatch": sc.stream, "batchSize": sc.batch_size},
-        diff_capacity=sc.diff_capacity)
+    args = {"updateBatch": sc.stream, "batchSize": sc.batch_size}
+    sess = program("tc").bind(csr, backend=backend,
+                              capacity=sc.diff_capacity)
+    res = sess.run("DynTC", **args)
     e2, _ = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
                                         sc.stream.adds, sc.stream.dels)
     ref = oracles.tc_oracle(sc.n, e2)
     assert int(res.value) == ref, \
         f"[{sc.name}] DSL DynTC {int(res.value)} != oracle {ref}"
 
-    eng = engine_cls()
-    g = eng.prepare(csr, diff_capacity=sc.diff_capacity)
-    _, count = hand_tc.dyn_tc(eng, g, sc.stream, sc.batch_size)
+    shim = _shim_run("tc", "DynTC", backend, csr, args, sc.diff_capacity)
+    assert int(shim.value) == int(res.value), \
+        f"[{sc.name}] session DynTC != Program.run shim"
+
+    gsess = api.bind_graph(csr, backend=backend, capacity=sc.diff_capacity)
+    count = gsess.call(hand_tc.dyn_tc, sc.stream, sc.batch_size)
     assert int(count) == ref, \
         f"[{sc.name}] hand-staged dyn_tc {int(count)} != oracle {ref}"

@@ -1,7 +1,11 @@
-"""The cross-backend conformance matrix: every (program × engine ×
-scenario) cell must satisfy DSL == oracle == hand-staged (see
-conformance.py).  This is the executable form of the paper's evaluation
-tables; new engines/kernels must keep it green.
+"""The cross-backend conformance matrix: every (program × backend ×
+scenario) cell must satisfy  api Session == Program.run shim (bit-exact)
+== oracle == hand-staged  (see conformance.py).  This is the executable
+form of the paper's evaluation tables; new engines/kernels must keep it
+green.
+
+Backends are addressed by registry name — a newly registered engine
+joins the matrix by adding its name to the lists below.
 
 The dist column pays a large shard_map tracing cost per case (~1 min on
 CPU), so only one representative dist cell per program stays in the
@@ -12,12 +16,8 @@ import pytest
 from conformance import (assert_pagerank, assert_pagerank_stream,
                          assert_sssp, assert_sssp_stream, assert_tc,
                          assert_tc_stream, digraph_scenario, sym_scenario)
-from repro.core.engine import JnpEngine
-from repro.core.dist import DistEngine
-from repro.core.frontier_engine import FrontierEngine
-from repro.core.pallas_engine import PallasEngine
 
-ENGINES = [JnpEngine, DistEngine, PallasEngine]
+BACKENDS = ["jnp", "dist", "pallas"]
 
 SSSP_SCENARIOS = ["batch1", "batch8", "batch64", "empty", "self_loops",
                   "dup_in_batch", "del_then_readd"]
@@ -28,43 +28,43 @@ TC_SCENARIOS = ["sym_batch2", "sym_batch16", "sym_empty", "sym_del_readd"]
 DIST_FAST = {"batch64"}
 
 
-def _cells(scenarios, engines):
+def _cells(scenarios, backends, fast=DIST_FAST, prefix=""):
     out = []
     for s in scenarios:
-        for e in engines:
+        for b in backends:
             marks = ()
-            if e is DistEngine and s not in DIST_FAST:
+            if b == "dist" and s not in fast:
                 marks = (pytest.mark.slow,)
-            out.append(pytest.param(s, e, marks=marks,
-                                    id=f"{s}-{e.name}"))
+            out.append(pytest.param(s, b, marks=marks,
+                                    id=f"{prefix}{s}-{b}"))
     return out
 
 
-@pytest.mark.parametrize("scenario,engine_cls", _cells(SSSP_SCENARIOS,
-                                                       ENGINES))
-def test_conformance_sssp(scenario, engine_cls):
-    assert_sssp(engine_cls, digraph_scenario(scenario))
+@pytest.mark.parametrize("scenario,backend", _cells(SSSP_SCENARIOS,
+                                                    BACKENDS))
+def test_conformance_sssp(scenario, backend):
+    assert_sssp(backend, digraph_scenario(scenario))
 
 
-@pytest.mark.parametrize("scenario,engine_cls", _cells(PR_SCENARIOS,
-                                                       ENGINES))
-def test_conformance_pagerank(scenario, engine_cls):
-    assert_pagerank(engine_cls, digraph_scenario(scenario))
+@pytest.mark.parametrize("scenario,backend", _cells(PR_SCENARIOS,
+                                                    BACKENDS))
+def test_conformance_pagerank(scenario, backend):
+    assert_pagerank(backend, digraph_scenario(scenario))
 
 
 # TC's wedge enumeration on the dist backend is the paper's admitted MPI
 # bottleneck; the two fast engines cover the kernel surface here while
 # test_backends.py keeps one dist TC case.
-@pytest.mark.parametrize("scenario,engine_cls",
-                         _cells(TC_SCENARIOS, [JnpEngine, PallasEngine]))
-def test_conformance_tc(scenario, engine_cls):
-    assert_tc(engine_cls, sym_scenario(scenario))
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(TC_SCENARIOS, ["jnp", "pallas"]))
+def test_conformance_tc(scenario, backend):
+    assert_tc(backend, sym_scenario(scenario))
 
 
 # ---------------------------------------------------------------------------
 # Streaming-executor cells: the same scenarios driven through
-# Engine.run_stream (one fused lax.scan per segment) must stay
-# oracle-exact on every engine.  Scenario-representative subset per
+# GraphSession.run_stream (one fused lax.scan per segment) must stay
+# oracle-exact on every backend.  Scenario-representative subset per
 # program keeps the fast lane fast; dist cells follow the DIST_FAST rule.
 # ---------------------------------------------------------------------------
 
@@ -75,32 +75,22 @@ STREAM_TC = ["sym_batch2", "sym_empty", "sym_del_readd"]
 DIST_STREAM_FAST = {"batch8"}
 
 
-def _stream_cells(scenarios, engines):
-    out = []
-    for s in scenarios:
-        for e in engines:
-            marks = ()
-            if e is DistEngine and s not in DIST_STREAM_FAST:
-                marks = (pytest.mark.slow,)
-            out.append(pytest.param(s, e, marks=marks,
-                                    id=f"stream-{s}-{e.name}"))
-    return out
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(STREAM_SSSP, BACKENDS + ["frontier"],
+                                fast=DIST_STREAM_FAST, prefix="stream-"))
+def test_stream_conformance_sssp(scenario, backend):
+    assert_sssp_stream(backend, digraph_scenario(scenario))
 
 
-@pytest.mark.parametrize("scenario,engine_cls",
-                         _stream_cells(STREAM_SSSP,
-                                       ENGINES + [FrontierEngine]))
-def test_stream_conformance_sssp(scenario, engine_cls):
-    assert_sssp_stream(engine_cls, digraph_scenario(scenario))
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(STREAM_PR, BACKENDS + ["frontier"],
+                                fast=DIST_STREAM_FAST, prefix="stream-"))
+def test_stream_conformance_pagerank(scenario, backend):
+    assert_pagerank_stream(backend, digraph_scenario(scenario))
 
 
-@pytest.mark.parametrize("scenario,engine_cls",
-                         _stream_cells(STREAM_PR, ENGINES + [FrontierEngine]))
-def test_stream_conformance_pagerank(scenario, engine_cls):
-    assert_pagerank_stream(engine_cls, digraph_scenario(scenario))
-
-
-@pytest.mark.parametrize("scenario,engine_cls",
-                         _stream_cells(STREAM_TC, [JnpEngine, PallasEngine]))
-def test_stream_conformance_tc(scenario, engine_cls):
-    assert_tc_stream(engine_cls, sym_scenario(scenario))
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(STREAM_TC, ["jnp", "pallas"],
+                                fast=DIST_STREAM_FAST, prefix="stream-"))
+def test_stream_conformance_tc(scenario, backend):
+    assert_tc_stream(backend, sym_scenario(scenario))
