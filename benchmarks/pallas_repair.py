@@ -1,0 +1,179 @@
+"""Fused vs chained Pallas repair path (ISSUE 6 tentpole scorecard).
+
+Races the two kernel regimes of ``PallasEngine`` on the paper's graph
+mix and lands every row in ``BENCH_pallas.json``:
+
+  relax    one fused launch (gather → relax → frontier-flag → in-kernel
+           compaction, ``kernels/pallas_repair.fused_relax_rows``) vs
+           the chained rowmin → hit → rowargmin kernel chain
+  spmv     fused SpMV+frontier launch vs the chained rowsum + segment_max
+  merge    ``update_csr_add`` with the merge-path pool kernel plugged in
+           vs the jnp binary-search + scatter rounds
+  e2e      dynamic SSSP end to end on the ``pallas`` vs the
+           ``pallas_chained`` registry engines
+
+Each row carries a *roofline-relative efficiency*: achieved bytes/s for
+a coarse traffic model of the launch (ELL arrays streamed once per
+launch, vertex arrays once, outputs once — the chained rows pay the
+re-stream per op) against ``roofline.HBM_BW``.  On the CPU interpret
+backend these fractions are tiny by construction; the quantity exists so
+the same JSON rows become meaningful when the suite runs on a real TPU,
+and so PRs can still compare fused-vs-chained *ratios* on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from common import timeit, emit, bench_graphs
+from roofline import HBM_BW
+from repro.graph import build_csr, random_updates
+from repro.graph import diffcsr
+from repro.graph.csr import INF_W
+from repro.core.registry import make_engine
+from repro.core.pallas_engine import _fused_upd_add
+from repro.kernels import ops as kops
+from repro.kernels import pallas_repair as FK
+from repro.algos import sssp
+
+_ITM = 4  # int32/float32 lanes throughout the repair path
+
+_upd_scatter = jax.jit(diffcsr.update_csr_add)
+
+
+def _relax_bytes(R, K, n, fused):
+    """Coarse HBM traffic model (bytes) for one repair sweep.
+
+    fused:   ell_src + ell_w once, vals once, min/arg/rows/counts out.
+    chained: rowmin and rowargmin each re-stream the ELL arrays and
+             vals, plus the hit pass over the vertex arrays.
+    """
+    if fused:
+        return _ITM * (2 * R * K + (n + 1) + 3 * R)
+    return _ITM * (2 * (2 * R * K + (n + 1) + R) + 2 * R)
+
+
+def _merge_bytes(D, B, fused):
+    """fused: one merge-path pass (read pool+batch, write pool).
+    scatter: two searchsorted sweeps + scatter rounds ~ 3 pool passes."""
+    if fused:
+        return _ITM * (4 * D + 4 * B + 4 * D)
+    return _ITM * (3 * 2 * 4 * D + 4 * B)
+
+
+def _roofline(nbytes, us):
+    gbps = nbytes / (us / 1e6) / 1e9
+    return gbps, nbytes / (us / 1e6) / HBM_BW
+
+
+def run(small=True, quick=False, percent=5, batch=16, iters=2):
+    graphs = bench_graphs(small)
+    if quick:
+        graphs = {"uniform": graphs["uniform"]}
+        iters = 1
+    for gname, (n, edges, w) in graphs.items():
+        keep = edges[:, 0] != edges[:, 1]
+        csr = build_csr(n, edges[keep], w[keep])
+        ups = random_updates(csr, percent=percent, seed=7)
+        cap = max(2 * ups.num_adds, 16)
+
+        eng = make_engine("pallas")
+        h = eng.prepare(csr, diff_capacity=cap)
+        ell = h.ell
+        R, K = ell.ell_src.shape
+        cfg = eng._config(h.g)
+
+        rng = np.random.default_rng(1)
+        dist = jnp.concatenate([
+            jnp.asarray(rng.integers(0, 1000, n).astype(np.int32)),
+            jnp.full((1,), INF_W, jnp.int32)])
+        rank = jnp.concatenate([
+            jnp.asarray(rng.random(n).astype(np.float32)),
+            jnp.zeros((1,), jnp.float32)])
+
+        # -- relax: one fused launch vs the per-op chain -------------------
+        def relax_fused():
+            return kops.vertex_relax_fused(ell, dist, block=cfg.row_block)
+
+        def relax_chained():
+            vmin = kops.vertex_min_plus(ell, dist)
+            parent = kops.vertex_argmin_src(ell, dist, vmin)
+            return vmin, parent, vmin < INF_W
+
+        t_f = timeit(relax_fused, iters=iters)
+        t_c = timeit(relax_chained, iters=iters)
+        for mode, t in (("fused", t_f), ("chained", t_c)):
+            nbytes = _relax_bytes(R, K, n, mode == "fused")
+            gbps, frac = _roofline(nbytes, t)
+            emit(f"pallas/relax/{gname}/{mode}", t,
+                 f"fused_speedup={t_c / max(t_f, 1):.2f};"
+                 f"model_bytes={nbytes};gbps={gbps:.3f};"
+                 f"roofline_frac={frac:.2e};"
+                 f"rows={R};lanes={K};row_block={cfg.row_block}")
+
+        # -- spmv: fused launch vs rowsum + segment_max --------------------
+        def spmv_fused():
+            return kops.vertex_spmv_fused(ell, rank, block=cfg.row_block)
+
+        def spmv_chained():
+            return kops.vertex_spmv(ell, rank)
+
+        t_f = timeit(spmv_fused, iters=iters)
+        t_c = timeit(spmv_chained, iters=iters)
+        for mode, t in (("fused", t_f), ("chained", t_c)):
+            nbytes = _relax_bytes(R, K, n, mode == "fused")
+            gbps, frac = _roofline(nbytes, t)
+            emit(f"pallas/spmv/{gname}/{mode}", t,
+                 f"fused_speedup={t_c / max(t_f, 1):.2f};"
+                 f"model_bytes={nbytes};gbps={gbps:.3f};"
+                 f"roofline_frac={frac:.2e}")
+
+        # -- update merge: merge-path kernel vs scatter rounds -------------
+        b0 = ups.batch(0, batch)
+        g0, B, D = h.g, batch, h.g.diff_capacity
+        upd_fused = _fused_upd_add(True, cfg.merge_block)
+
+        def merge_fused():
+            return upd_fused(g0, b0.add_src, b0.add_dst, b0.add_w,
+                             b0.add_mask)
+
+        def merge_scatter():
+            return _upd_scatter(g0, b0.add_src, b0.add_dst, b0.add_w,
+                                b0.add_mask)
+
+        t_f = timeit(merge_fused, iters=iters)
+        t_c = timeit(merge_scatter, iters=iters)
+        for mode, t in (("fused", t_f), ("scatter", t_c)):
+            nbytes = _merge_bytes(D, B, mode == "fused")
+            gbps, frac = _roofline(nbytes, t)
+            emit(f"pallas/merge/{gname}/{mode}", t,
+                 f"fused_speedup={t_c / max(t_f, 1):.2f};"
+                 f"model_bytes={nbytes};gbps={gbps:.3f};"
+                 f"roofline_frac={frac:.2e};"
+                 f"pool={D};batch={B};merge_block={cfg.merge_block}")
+
+        # -- end to end: the two registry engines race dynamic SSSP --------
+        if quick:
+            continue
+        times = {}
+        for ename in ("pallas", "pallas_chained"):
+            e2 = make_engine(ename)
+            g2 = e2.prepare(csr, diff_capacity=cap)
+            props0 = sssp.static_sssp(e2, g2, 0)
+            times[ename] = timeit(
+                lambda e2=e2, g2=g2, props0=props0: sssp.dyn_sssp(
+                    e2, g2, 0, ups, batch, props=props0)[1]["dist"],
+                iters=iters)
+        for ename, t in times.items():
+            mode = "fused" if ename == "pallas" else "chained"
+            emit(f"pallas/e2e_sssp/{gname}/{mode}", t,
+                 f"fused_speedup="
+                 f"{times['pallas_chained'] / max(times['pallas'], 1):.2f};"
+                 f"num_updates={ups.num_adds + ups.num_dels}")
+
+
+if __name__ == "__main__":
+    run()

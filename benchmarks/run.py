@@ -6,6 +6,9 @@
   tc                  paper TC columns (wedge enumeration, uniform graphs)
   merge_policy        diff-CSR merge cadence ablation (paper §3.5 knob)
   scheduling          backend scheduling trade-offs (paper Table 6 analogue)
+  pallas              fused vs chained Pallas repair kernels (relax /
+                      spmv / ΔG pool merge / e2e) with roofline-relative
+                      efficiency per row (ISSUE 6 tentpole scorecard)
   roofline            §Roofline terms per (arch × shape × mesh) from the
                       dry-run artifacts (reads benchmarks/results/dryrun.json)
 
@@ -31,7 +34,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "dynamic_vs_static", "stream", "tc",
                              "merge_policy", "scheduling", "static_baselines",
-                             "roofline"])
+                             "pallas", "roofline"])
     ap.add_argument("--small", action="store_true", default=True,
                     help="reduced graph sizes (CI-speed; default on CPU)")
     ap.add_argument("--full", dest="small", action="store_false",
@@ -71,6 +74,10 @@ def main() -> None:
     if args.suite in ("all", "static_baselines"):
         import static_baselines
         suite("static_baselines", lambda: static_baselines.run(small=True))
+    if args.suite in ("all", "pallas"):
+        import pallas_repair
+        suite("pallas", lambda: pallas_repair.run(small=args.small,
+                                                  quick=args.quick))
     if args.suite in ("all", "roofline"):
         import roofline
         suite("roofline", roofline.run)

@@ -327,6 +327,7 @@ class DistEngine(Engine):
         return jnp.stack([jnp.sum(dg.overflow), used, dead])
 
     def grow(self, dg: DistGraph, factor: float = 2.0) -> DistGraph:
+        self._evict_stream_cache(self._handle_shape_key(dg))
         cap = dg.d_src.shape[1]
         return self.merge(dg, diff_capacity=max(int(cap * factor), cap + 16))
 
@@ -339,8 +340,12 @@ class DistEngine(Engine):
     def _diff_capacity(self, dg: DistGraph) -> int:
         return int(dg.d_src.shape[1])
 
-    def _segment_runner(self, step_fn, dg: DistGraph):
-        fn = self._stream_cache.get(step_fn)
+    def _handle_shape_key(self, dg: DistGraph) -> tuple:
+        return (int(dg.src.shape[1]), int(dg.d_src.shape[1]))
+
+    def _segment_runner(self, step_fn, dg: DistGraph, batch_size: int):
+        key = (step_fn, self._handle_shape_key(dg), batch_size)
+        fn = self._stream_cache.get(key)
         if fn is None:
             view = _DistStreamView(self)
             ax = self.axis
@@ -370,7 +375,7 @@ class DistEngine(Engine):
                 dg, carry, counters = shmapped(dg, carry, stacked)
                 return dg, carry, counters[0]
 
-            self._stream_cache[step_fn] = fn
+            self._stream_cache[key] = fn
         return fn
 
     def run_stream(self, dg: DistGraph, stream, batch_size: int, step_fn,

@@ -209,7 +209,23 @@ class Engine:
     def _diff_capacity(self, handle) -> int:
         return self.handle_graph(handle).diff_capacity
 
-    def _segment_runner(self, step_fn, handle):
+    def _handle_shape_key(self, handle) -> tuple:
+        """The handle's static capacities (E_cap, D_cap) — the part of a
+        compiled stream executable's identity that ``grow`` invalidates."""
+        g = self.handle_graph(handle)
+        return (g.main_capacity, g.diff_capacity)
+
+    def _evict_stream_cache(self, shape_key: tuple) -> None:
+        """Drop compiled stream executables specialized on ``shape_key``.
+        Called by ``grow``: the old-capacity executables can never run
+        again, so keeping them leaks one per capacity step.  Cache keys
+        embed the shape key as a top-level tuple element."""
+        cache = getattr(self, "_stream_cache", None)
+        if cache:
+            for k in [k for k in cache if shape_key in k]:
+                del cache[k]
+
+    def _segment_runner(self, step_fn, handle, batch_size: int):
         """Compiled ``(handle, carry, stacked_batches) -> (handle, carry,
         (overflow, used, dead))`` for one fused stream segment."""
         raise NotImplementedError
@@ -230,17 +246,21 @@ class Engine:
         i = 0
         while i < nb:
             k = min(seg, nb - i)
+            # stack the segment ONCE; grow-and-replay retries reuse it
+            # (the batch content is capacity-independent)
             stacked = stream.stacked(batch_size, i, k)
-            snap = (handle, carry)
-            run = self._segment_runner(step_fn, handle)
-            handle, carry, counters = run(handle, carry, stacked)
-            of, _used, dead = (int(x) for x in np.asarray(counters))
-            if of > of0:
-                # adds were dropped inside the segment: roll back, grow
-                # the pool, replay the segment on the larger shapes.
-                handle, carry = self.grow(snap[0]), snap[1]
-                of0 = 0
-                continue
+            while True:
+                snap = (handle, carry)
+                run = self._segment_runner(step_fn, handle, batch_size)
+                handle, carry, counters = run(handle, carry, stacked)
+                of, _used, dead = (int(x) for x in np.asarray(counters))
+                if of > of0:
+                    # adds were dropped inside the segment: roll back,
+                    # grow the pool, replay on the larger shapes.
+                    handle, carry = self.grow(snap[0]), snap[1]
+                    of0 = 0
+                    continue
+                break
             of0 = of
             if dead > compact_frac * max(self._diff_capacity(handle), 1):
                 handle = self.compact_handle(handle)
@@ -258,14 +278,18 @@ class Engine:
             batch = stream.batch(i, batch_size)
             snap = (handle, carry)
             handle, carry = step_fn(view, handle, batch, carry)
-            while int(np.asarray(self.handle_counters(handle)[0])) > of0:
+            # ONE counter sync per batch (and per replay): read the
+            # (overflow, used, dead) triple once, branch on the host copy.
+            of, _used, dead = (int(x) for x in
+                               np.asarray(self.handle_counters(handle)))
+            while of > of0:
                 # adds were dropped: roll back, grow capacity, replay.
                 handle, carry = self.grow(snap[0]), snap[1]
                 of0 = 0
                 snap = (handle, carry)
                 handle, carry = step_fn(view, handle, batch, carry)
-            of, _used, dead = (int(x) for x in
-                               np.asarray(self.handle_counters(handle)))
+                of, _used, dead = (int(x) for x in
+                                   np.asarray(self.handle_counters(handle)))
             of0 = of
             if dead > compact_frac * max(self._diff_capacity(handle), 1):
                 handle = self.compact_handle(handle)
@@ -481,17 +505,22 @@ class JnpEngine(Engine):
         return self._max_deg("main", g.offsets), g.diff_capacity
 
     def grow(self, g: DynGraph, factor: float = 2.0) -> DynGraph:
+        # the old-capacity stream executables can never run again
+        self._evict_stream_cache((g.main_capacity, g.diff_capacity))
         cap = max(int(g.diff_capacity * factor), g.diff_capacity + 16)
         return diffcsr.merge(g, diff_capacity=cap)
 
     def compact_handle(self, g: DynGraph) -> DynGraph:
         return JnpEngine._compact(g)
 
-    def _stream_scan(self, step_fn, bounds):
+    def _stream_scan(self, step_fn, bounds, shape_key, batch_size):
         """One jitted program scanning a whole stream segment through
         update → affected-seed → incremental repair.  Cached per
-        (step_fn, bounds); jit's own aval cache handles shape changes."""
-        key = (step_fn, bounds)
+        (step_fn, bounds, handle shapes, batch size) so ``grow`` can
+        evict the executables its capacity change strands (jit's own
+        aval cache would otherwise keep one per capacity step alive
+        forever — PR 5 debt #1)."""
+        key = (step_fn, bounds, shape_key, batch_size)
         fn = self._stream_cache.get(key)
         if fn is None:
             view = self.stream_view(bounds)
@@ -508,8 +537,9 @@ class JnpEngine(Engine):
             self._stream_cache[key] = fn
         return fn
 
-    def _segment_runner(self, step_fn, handle):
-        return self._stream_scan(step_fn, self.static_wedge_bounds(handle))
+    def _segment_runner(self, step_fn, handle, batch_size: int):
+        return self._stream_scan(step_fn, self.static_wedge_bounds(handle),
+                                 self._handle_shape_key(handle), batch_size)
 
     def run_stream(self, handle, stream, batch_size: int, step_fn,
                    carry, segment_size: int = 8, compact_frac: float = 0.5):

@@ -80,6 +80,10 @@ class FrontierEngine(JnpEngine):
         self.k = k
         self.sparse_frac = sparse_frac
         self._jit_cache: Dict = {}
+        # stable per-engine jitted repack (see PallasEngine): the
+        # ell_apply_add cond branch binds a cached jaxpr per call
+        # instead of re-tracing the whole push pack
+        self._repack = jax.jit(functools.partial(_pack_push_ell_raw, k=k))
 
     # -- construction / updates (repack after structural change) -----------
     def prepare(self, csr: CSR, diff_capacity: int) -> FrontierHandle:
@@ -105,7 +109,7 @@ class FrontierEngine(JnpEngine):
         push = ell_apply_add(h.push, h.g, g, batch.add_src, batch.add_dst,
                              batch.add_w, batch.add_mask,
                              slot_value=batch.add_dst,
-                             repack=lambda gg: _pack_push_ell_raw(gg, self.k))
+                             repack=self._repack)
         return FrontierHandle(g=g, push=push)
 
     def batch_edge_flags(self, h: FrontierHandle, qs, qd, mask):

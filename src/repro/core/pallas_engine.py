@@ -6,6 +6,21 @@ Sweeps that declare a ``gather_form`` lower onto the row-split-ELL Pallas
 kernels in ``repro.kernels``; everything else falls back to the JnpEngine
 lowering (the paper, likewise, only kernelizes the forall bodies).
 
+Two kernel regimes, selected by the ``fused`` flag:
+
+  * fused (default) — the repair step runs ONE launch per sweep
+    (``kernels/pallas_repair.fused_relax_rows``: gather → relax →
+    frontier-flag → in-kernel compaction), and ``update_add`` merges the
+    batch into the diff pool with the merge-path kernel instead of the
+    jnp scatter rounds.  Block sizes come from the (N, E_cap, K)-keyed
+    autotuner, cached per handle shape.
+  * chained (``fused=False``, registry name ``pallas_chained``) — the
+    original per-op kernel chain (rowmin → hit → rowargmin), kept as
+    the benchmark baseline for BENCH_pallas.json.
+
+Both regimes are bit-exact against each other and the jnp lowering
+(tests/test_kernels.py, tests/test_conformance.py).
+
 The ELL pack is rebuilt once per update batch and *reused across all
 fixed-point iterations* — the analogue of the paper's CUDA optimization
 of keeping the graph resident on the GPU across kernel launches (§5.3).
@@ -13,6 +28,7 @@ of keeping the graph resident on the GPU across kernel launches (§5.3).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict
 
 import jax
@@ -28,6 +44,7 @@ from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del)
 from repro.kernels.ell import pack_ell as _pack_ell_raw
 pack_ell = jax.jit(_pack_ell_raw, static_argnums=(1, 2))
 from repro.kernels import ops as kops
+from repro.kernels import pallas_repair as FK
 
 
 @jax.tree_util.register_dataclass
@@ -37,13 +54,37 @@ class PallasHandle:
     ell: Ell
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_upd_add(interpret: bool, block: int):
+    """Jitted update_csr_add with the merge-path pool kernel plugged in.
+
+    Cached per (interpret, block) so every engine instance (and every
+    trace inside a fused stream scan) binds the SAME jitted callable —
+    jit's executable cache then keys only on the handle shapes."""
+    merge = functools.partial(FK.merge_pool_sorted, block=block,
+                              interpret=interpret)
+    return jax.jit(functools.partial(diffcsr.update_csr_add,
+                                     pool_merge=merge))
+
+
 class PallasEngine(JnpEngine):
     name = "pallas"
 
-    def __init__(self, k: int = 8, interpret: bool = True):
+    def __init__(self, k: int = 8, interpret: bool = True,
+                 fused: bool = True, autotune: bool = False):
         super().__init__()
         self.k = k
         self.interpret = interpret
+        self.fused = fused
+        self.autotune = autotune     # measure candidates vs. heuristic
+        # stable per-engine jitted repack: ell_apply_add's cond branch
+        # then hits jit's cache instead of re-tracing the pack per call
+        self._repack = jax.jit(functools.partial(_pack_ell_raw, k=k))
+
+    def _config(self, g: DynGraph) -> FK.RepairConfig:
+        return FK.repair_config(
+            g.n, g.main_capacity + g.diff_capacity, self.k,
+            measure=self.autotune, interpret=self.interpret)
 
     # -- construction / updates --------------------------------------------
     # The ELL pack stays device-resident across batches: tombstones and
@@ -69,12 +110,21 @@ class PallasEngine(JnpEngine):
         return PallasHandle(g=g, ell=ell)
 
     def update_add(self, h: PallasHandle, batch: UpdateBatch) -> PallasHandle:
-        g = super().update_add(h.g, batch)
+        if self.fused:
+            # one merge-path launch folds the admitted batch into the
+            # sorted diff pool (replaces two binary-search sweeps + four
+            # scatter rounds)
+            cfg = self._config(h.g)
+            g = _fused_upd_add(self.interpret, cfg.merge_block)(
+                h.g, batch.add_src, batch.add_dst, batch.add_w,
+                batch.add_mask)
+        else:
+            g = super().update_add(h.g, batch)
         # pull layout: slots hold SOURCES
         ell = ell_apply_add(h.ell, h.g, g, batch.add_src, batch.add_dst,
                             batch.add_w, batch.add_mask,
                             slot_value=batch.add_src,
-                            repack=lambda gg: _pack_ell_raw(gg, self.k))
+                            repack=self._repack)
         return PallasHandle(g=g, ell=ell)
 
     def batch_edge_flags(self, h: PallasHandle, qs, qd, mask):
@@ -112,6 +162,47 @@ class PallasEngine(JnpEngine):
             return super()._run_sweep(h, sw, props)
         if not self._kernel_compatible(sw):
             return super()._run_sweep(h.g, sw, props)
+        if self.fused:
+            return self._run_sweep_fused(h, sw, props)
+        return self._run_sweep_chained(h, sw, props)
+
+    def _run_sweep_fused(self, h: PallasHandle, sw: EdgeSweep,
+                         props: Props) -> Props:
+        """One fused launch per sweep: min/argmin/hit (or sum/hit) come
+        out of a single kernel with in-kernel frontier compaction."""
+        ell = h.ell
+        cfg = self._config(h.g)
+        reduced, hit, parents = {}, {}, {}
+        for target, red in sw.reduces.items():
+            if red.kind == "argmin":
+                continue
+            vec_fn, use_w = sw.gather_form[target]
+            vec = vec_fn(props)
+            ident = red.identity(vec.dtype)
+            vals_n1 = jnp.concatenate([vec, jnp.full((1,), ident, vec.dtype)])
+            if red.kind == "min":
+                assert use_w
+                vmin, parent, hv = kops.vertex_relax_fused(
+                    ell, vals_n1, block=cfg.row_block,
+                    interpret=self.interpret)
+                reduced[target], hit[target] = vmin, hv
+                parents[target] = parent
+            else:  # sum
+                vsum, hv = kops.vertex_spmv_fused(
+                    ell, vals_n1, block=cfg.row_block,
+                    interpret=self.interpret)
+                reduced[target], hit[target] = vsum, hv
+        for target, red in sw.reduces.items():
+            if red.kind != "argmin":
+                continue
+            reduced[target] = parents[red.of]
+            hit[target] = hit[red.of]
+        return sw.post_fn(props, reduced, hit)
+
+    def _run_sweep_chained(self, h: PallasHandle, sw: EdgeSweep,
+                           props: Props) -> Props:
+        """Per-op kernel chain (the pre-fusion lowering, benchmark
+        baseline): rowmin → vertex combine → hit → rowargmin."""
         g, ell = h.g, h.ell
         n = self.n_pad
         reduced, hit = {}, {}
@@ -148,3 +239,11 @@ class PallasEngine(JnpEngine):
                 ell, vals_n1, reduced[of], interpret=self.interpret)
             hit[target] = hit[of]
         return sw.post_fn(props, reduced, hit)
+
+
+def PallasChainedEngine(**kw) -> PallasEngine:
+    """Registry factory for the chained baseline (``pallas_chained``):
+    the same engine with per-op kernel chains instead of fused launches
+    — conformance keeps it honest, BENCH_pallas.json races it."""
+    kw.setdefault("fused", False)
+    return PallasEngine(**kw)

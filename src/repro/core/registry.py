@@ -40,6 +40,7 @@ _BUILTIN_PATHS: Dict[str, str] = {
     "jnp": "repro.core.engine:JnpEngine",
     "dist": "repro.core.dist:DistEngine",
     "pallas": "repro.core.pallas_engine:PallasEngine",
+    "pallas_chained": "repro.core.pallas_engine:PallasChainedEngine",
     "frontier": "repro.core.frontier_engine:FrontierEngine",
 }
 

@@ -91,9 +91,16 @@ def pack_push_ell(g: DynGraph, k: int = 8, row_tile: int = 128) -> Ell:
     return _pack(g.n, edst, esrc, ew, _materialized(g), ealive, k, row_tile)
 
 
+# Python-side trace telemetry: bumped once per TRACE of the pack (not
+# per execution), so tests can pin that cached update paths stop
+# re-tracing the repack branch (PR 5 debt #2).
+TRACE_COUNTS = {"pack": 0}
+
+
 def _pack(n, eother, egroup, ew, emat, ealive, k, row_tile) -> Ell:
     """Group materialized lanes by ``egroup``; slots hold ``eother``
     endpoints for alive lanes and the sentinel n for tombstoned ones."""
+    TRACE_COUNTS["pack"] += 1
     E = egroup.shape[0]
     R = ell_capacity(n, E, k, row_tile)
 
@@ -164,6 +171,12 @@ def ell_apply_del(ell: Ell, g_prev: DynGraph, src, dst, mask) -> Ell:
     return patch_ell_tombstone(ell, lane, active)
 
 
+# Stable jitted revive branch: eager ``lax.cond`` re-traces both
+# branches per call, but tracing a jitted callable only binds its cached
+# jaxpr — the heavy bodies compile once per shape (PR 5 debt #2).
+_patch_ell_revive = jax.jit(patch_ell_revive)
+
+
 def ell_apply_add(ell: Ell, g_prev: DynGraph, g_new: DynGraph,
                   src, dst, w, mask, slot_value, repack) -> Ell:
     """An addition batch against the pack.  Revivals resolve against the
@@ -171,11 +184,14 @@ def ell_apply_add(ell: Ell, g_prev: DynGraph, g_new: DynGraph,
     appended to the diff pool, and then ``repack`` rebuilds the pack —
     a traced lax.cond, so the whole path runs inside the fused scan.
     ``slot_value`` is the non-grouping endpoint stored in the slots
-    (source for the pull layout, destination for push)."""
+    (source for the pull layout, destination for push).  ``repack``
+    must be a STABLE jitted callable (one per engine, not a per-call
+    lambda): eager cond tracing then hits jit's jaxpr cache instead of
+    re-tracing the whole pack every batch."""
     lane, active = update_lanes(g_prev, src, dst, mask)
     structural = jnp.any(g_new.d_offsets != g_prev.d_offsets)
     return jax.lax.cond(
         structural,
         lambda _: repack(g_new),
-        lambda _: patch_ell_revive(ell, lane, slot_value, w, active),
+        lambda _: _patch_ell_revive(ell, lane, slot_value, w, active),
         operand=None)

@@ -9,6 +9,24 @@ import pytest
 from repro.graph import build_csr
 from repro.algos import oracles
 
+# XLA's CPU backend segfaults mid-compile once enough jitted executables
+# accumulate in one long pytest process (observed deterministically around
+# the 59th fast-lane test on single-core hosts).  Every test builds its
+# own engines/graphs, so dropping the global jit caches between tests is
+# semantically free — do it every CLEAR_EVERY tests to bound the resident
+# compiled-code footprint without paying a full recompile per test.
+_CLEAR_EVERY = 24
+_test_count = {"n": 0}
+
+
+@pytest.fixture(autouse=True)
+def _bounded_jit_cache():
+    yield
+    _test_count["n"] += 1
+    if _test_count["n"] % _CLEAR_EVERY == 0:
+        import jax
+        jax.clear_caches()
+
 
 def random_digraph(n=60, deg=4, seed=3, max_w=100):
     rng = np.random.default_rng(seed)

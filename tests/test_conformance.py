@@ -28,12 +28,18 @@ TC_SCENARIOS = ["sym_batch2", "sym_batch16", "sym_empty", "sym_del_readd"]
 DIST_FAST = {"batch64"}
 
 
+# backends whose cells mostly run in the slow lane (one fast
+# representative each): dist pays shard_map tracing, pallas_chained is
+# the pre-fusion baseline kept honest by one cell per program.
+_MOSTLY_SLOW = {"dist", "pallas_chained"}
+
+
 def _cells(scenarios, backends, fast=DIST_FAST, prefix=""):
     out = []
     for s in scenarios:
         for b in backends:
             marks = ()
-            if b == "dist" and s not in fast:
+            if b in _MOSTLY_SLOW and s not in fast:
                 marks = (pytest.mark.slow,)
             out.append(pytest.param(s, b, marks=marks,
                                     id=f"{prefix}{s}-{b}"))
@@ -76,14 +82,16 @@ DIST_STREAM_FAST = {"batch8"}
 
 
 @pytest.mark.parametrize("scenario,backend",
-                         _cells(STREAM_SSSP, BACKENDS + ["frontier"],
+                         _cells(STREAM_SSSP,
+                                BACKENDS + ["pallas_chained", "frontier"],
                                 fast=DIST_STREAM_FAST, prefix="stream-"))
 def test_stream_conformance_sssp(scenario, backend):
     assert_sssp_stream(backend, digraph_scenario(scenario))
 
 
 @pytest.mark.parametrize("scenario,backend",
-                         _cells(STREAM_PR, BACKENDS + ["frontier"],
+                         _cells(STREAM_PR,
+                                BACKENDS + ["pallas_chained", "frontier"],
                                 fast=DIST_STREAM_FAST, prefix="stream-"))
 def test_stream_conformance_pagerank(scenario, backend):
     assert_pagerank_stream(backend, digraph_scenario(scenario))

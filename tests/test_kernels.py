@@ -1,5 +1,8 @@
 """Per-kernel interpret-mode validation against pure-jnp oracles,
 with shape/dtype sweeps and hypothesis randomization (brief §(c))."""
+import dataclasses
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -7,9 +10,11 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.graph import build_csr, from_csr
-from repro.graph.csr import INF_W
+from repro.graph import diffcsr
+from repro.graph.csr import INF_W, INT
 from repro.kernels.ell import pack_ell, Ell
 from repro.kernels import csr_relax as K
+from repro.kernels import pallas_repair as FK
 from repro.kernels import ref as R
 from repro.kernels import ops as kops
 from repro.kernels.flash_attention import flash_attention
@@ -74,6 +79,116 @@ def test_vertex_ops_match_segment_reduction():
     cand = jnp.where(ealive, vals[esrc] + ew, INF_W)
     want = jax.ops.segment_min(cand, edst, num_segments=100)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fused repair kernels (kernels/pallas_repair.py) vs the chained path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,k,block", [(64, 256, 8, 128),
+                                         (200, 1000, 4, 128),
+                                         (300, 2000, 8, 256)])
+def test_fused_relax_matches_chained(n, e, k, block):
+    """One fused launch == rowmin → hit → rowargmin chain, bit-exact."""
+    rng = np.random.default_rng(n + e)
+    _, ell = _random_ell(rng, n, e, k)
+    vals = jnp.concatenate([
+        jnp.asarray(rng.integers(0, 1000, n).astype(np.int32)),
+        jnp.full((1,), INF_W, jnp.int32)])
+    vmin, parent, hit = kops.vertex_relax_fused(ell, vals, block=block)
+    want_min = kops.vertex_min_plus(ell, vals)
+    want_par = kops.vertex_argmin_src(ell, vals, want_min)
+    assert np.array_equal(np.asarray(vmin), np.asarray(want_min))
+    assert np.array_equal(np.asarray(parent), np.asarray(want_par))
+    assert np.array_equal(np.asarray(hit), np.asarray(want_min) < INF_W)
+
+
+def test_fused_relax_frontier_compaction_invariants():
+    """The in-kernel compaction packs frontier row ids to each tile's
+    prefix (padded with sentinel R), and per-tile counts match."""
+    rng = np.random.default_rng(5)
+    n, block = 64, 128
+    _, ell = _random_ell(rng, n, 256, 8)
+    vals = jnp.concatenate([
+        jnp.asarray(rng.integers(0, 1000, n).astype(np.int32)),
+        jnp.full((1,), INF_W, jnp.int32)])
+    rmin, _, rows, cnts = FK.fused_relax_rows(ell.ell_src, ell.ell_w, vals,
+                                              block=block)
+    R_ = ell.R
+    hit_rows = np.nonzero(np.asarray(rmin) < INF_W)[0]
+    got_rows, got = np.asarray(rows), []
+    for t in range(R_ // block):
+        c = int(np.asarray(cnts)[t])
+        seg = got_rows[t * block:(t + 1) * block]
+        assert (seg[:c] < R_).all() and (seg[c:] == R_).all(), t
+        got.extend(seg[:c].tolist())
+    assert sorted(got) == hit_rows.tolist()
+
+
+def test_fused_spmv_matches_chained():
+    rng = np.random.default_rng(9)
+    n = 100
+    _, ell = _random_ell(rng, n, 700, 8)
+    vals = jnp.concatenate([jnp.asarray(rng.random(n).astype(np.float32)),
+                            jnp.zeros((1,), jnp.float32)])
+    vsum, hit = kops.vertex_spmv_fused(ell, vals)
+    want = kops.vertex_spmv(ell, vals)
+    want_hit = jax.ops.segment_max(
+        (ell.row2dst < n).astype(INT), jnp.minimum(ell.row2dst, n),
+        num_segments=n + 1)[:n].astype(bool)
+    assert np.array_equal(np.asarray(vsum), np.asarray(want))
+    assert np.array_equal(np.asarray(hit), np.asarray(want_hit))
+
+
+def _assert_graphs_equal(g1, g2):
+    for f in dataclasses.fields(g1):
+        a, b = getattr(g1, f.name), getattr(g2, f.name)
+        if f.name == "n":
+            assert a == b
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b)), f.name
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_merge_kernel_matches_jnp_update(seed):
+    """update_csr_add with the merge-path kernel plugged in is bit-exact
+    against the scatter path — dedupe, revivals and overflow included."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    e = rng.integers(0, n, size=(120, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    csr = build_csr(n, e, rng.integers(1, 50, len(e)).astype(np.int32))
+    d = int(rng.integers(3, 24))
+    g = from_csr(csr, diff_capacity=d)
+    merge_impl = functools.partial(FK.merge_pool_sorted, block=128,
+                                   interpret=True)
+    for step in range(4):
+        B = int(rng.integers(2, 12))
+        qs = jnp.asarray(rng.integers(0, n, B).astype(np.int32))
+        qd = jnp.asarray(rng.integers(0, n, B).astype(np.int32))
+        qw = jnp.asarray(rng.integers(1, 50, B).astype(np.int32))
+        mask = jnp.asarray(rng.random(B) < 0.9)
+        g1 = diffcsr.update_csr_add(g, qs, qd, qw, mask)
+        g2 = diffcsr.update_csr_add(g, qs, qd, qw, mask,
+                                    pool_merge=merge_impl)
+        _assert_graphs_equal(g1, g2)
+        g = g1
+        if step == 1:  # interleave tombstones so revivals get exercised
+            g = diffcsr.update_csr_del(g, qs[: B // 2], qd[: B // 2])
+
+
+def test_repair_config_cached_per_shape():
+    FK.clear_tune_cache()
+    c1 = FK.repair_config(64, 300, 8)
+    assert FK.repair_config(64, 300, 8) is c1          # cache hit
+    assert FK.repair_config(64, 600, 8) is not c1      # new shape, new cfg
+    R_ = 128 * ((64 + -(-300 // 8) + 127) // 128)
+    assert R_ % c1.row_block == 0
+    FK.clear_tune_cache()
+    cm = FK.repair_config(32, 64, 8, measure=True)     # timed candidates
+    assert cm.row_block in (128, 256, 512)
+    assert cm.merge_block in (128, 256)
+    FK.clear_tune_cache()
 
 
 @pytest.mark.parametrize("S,dh,causal,dtype", [

@@ -1,0 +1,146 @@
+"""Regression tests pinning the four PR 5 stream-executor perf debts
+(failing before the fix, passing after):
+
+  #1 ``_stream_cache`` leaked one compiled executable per capacity step
+     because keys ignored the handle's static shapes — ``grow`` now
+     evicts the stale entries;
+  #2 ``ell_apply_add`` re-traced the repack branch on every eager call
+     (fresh ``repack`` lambda per call) — engines now pass a stable
+     jitted repack, pinned via the pack trace counter;
+  #3 ``_run_stream_fused`` re-stacked the segment on every
+     grow-and-replay retry — stacked once per segment window now;
+  #4 baseline ``Engine.run_stream`` synced the pool counters twice per
+     batch — one (overflow, used, dead) read per batch now.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.graph import build_csr
+from repro.graph.updates import UpdateStream, random_updates
+from repro.core.engine import Engine, JnpEngine
+from repro.core.pallas_engine import PallasEngine
+from repro.core.frontier_engine import FrontierEngine
+from repro.kernels import ell as ell_mod
+from repro.algos import sssp
+
+
+def _graph(n=48, deg=4, seed=7, max_w=30):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(n * deg, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    w = rng.integers(1, max_w, size=len(e)).astype(np.int32)
+    return build_csr(n, e, w)
+
+
+# ---------------------------------------------------------------------------
+# #1: grow() evicts the stale-capacity stream executables
+# ---------------------------------------------------------------------------
+
+def test_stream_cache_evicted_on_grow():
+    csr = _graph()
+    ups = random_updates(csr, percent=40, seed=3)
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=4)          # guaranteed overflow
+    g2, _ = sssp.dyn_sssp_stream(eng, g, 0, ups, batch_size=4,
+                                 segment_size=3)
+    assert eng.handle_graph(g2).diff_capacity > 4  # at least one grow
+    final = eng._handle_shape_key(g2)
+    assert eng._stream_cache, "fused path should have cached a runner"
+    stale = [k for k in eng._stream_cache if final not in k]
+    assert not stale, f"stale-capacity executables leaked: {stale}"
+
+
+def test_stream_cache_keys_carry_shapes_and_batch_size():
+    csr = _graph(seed=11)
+    ups = random_updates(csr, percent=10, seed=5)
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=64)         # no overflow
+    sssp.dyn_sssp_stream(eng, g, 0, ups, batch_size=8, segment_size=2)
+    key = eng._handle_shape_key(g)
+    assert all(key in k and 8 in k for k in eng._stream_cache)
+
+
+# ---------------------------------------------------------------------------
+# #2: structural adds stop re-tracing the repack once warm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [PallasEngine, FrontierEngine],
+                         ids=["pallas", "frontier"])
+def test_repack_traces_once_across_eager_adds(engine_cls):
+    csr = _graph(n=32, seed=17)
+    eng = engine_cls()
+    h = eng.prepare(csr, diff_capacity=32)
+    fresh = [(1, 30), (2, 29), (3, 28), (4, 27)]
+
+    def add(h, u, v):
+        b = UpdateStream(adds=np.array([[u, v, 5]], np.int32),
+                         dels=np.zeros((0, 2), np.int32)).batch(0, 4)
+        return eng.update_add(h, b)
+
+    h = add(h, *fresh[0])                          # warm the caches
+    before = ell_mod.TRACE_COUNTS["pack"]
+    for u, v in fresh[1:]:                         # same shapes, fresh edges
+        h = add(h, u, v)
+    traced = ell_mod.TRACE_COUNTS["pack"] - before
+    assert traced == 0, (
+        f"repack branch re-traced {traced}x on cached-shape eager adds")
+
+
+# ---------------------------------------------------------------------------
+# #3: one stacked() per segment window, replays included
+# ---------------------------------------------------------------------------
+
+class _CountingStream(UpdateStream):
+    calls = {"stacked": 0}
+
+    def stacked(self, *a, **kw):
+        _CountingStream.calls["stacked"] += 1
+        return super().stacked(*a, **kw)
+
+
+def test_segment_stacked_once_across_overflow_replays():
+    csr = _graph()
+    ups = random_updates(csr, percent=40, seed=3)
+    stream = _CountingStream(adds=ups.adds, dels=ups.dels)
+    eng = JnpEngine()
+    g = eng.prepare(csr, diff_capacity=4)          # guaranteed overflow
+    _CountingStream.calls["stacked"] = 0
+    batch_size, seg = 4, 3
+    g2, _ = sssp.dyn_sssp_stream(eng, g, 0, stream, batch_size=batch_size,
+                                 segment_size=seg)
+    assert eng.handle_graph(g2).diff_capacity > 4  # replays happened
+    nb = stream.num_batches(batch_size)
+    windows = -(-nb // seg)
+    assert _CountingStream.calls["stacked"] == windows, (
+        f"expected one stacked() per segment window ({windows}), got "
+        f"{_CountingStream.calls['stacked']} — replays must reuse the stack")
+
+
+# ---------------------------------------------------------------------------
+# #4: one counter sync per baseline batch
+# ---------------------------------------------------------------------------
+
+class _SyncCountingJnp(JnpEngine):
+    def __init__(self):
+        super().__init__()
+        self.counter_syncs = 0
+
+    def handle_counters(self, handle):
+        self.counter_syncs += 1
+        return super().handle_counters(handle)
+
+
+def test_baseline_run_stream_syncs_counters_once_per_batch():
+    csr = _graph(seed=13)
+    ups = random_updates(csr, percent=20, seed=5)
+    eng = _SyncCountingJnp()
+    g = eng.prepare(csr, diff_capacity=64)         # ample: no replays
+    props0 = sssp.static_sssp(eng, g, 0)
+    eng.counter_syncs = 0
+    Engine.run_stream(eng, g, ups, 4, sssp.stream_step, props0)
+    nb = ups.num_batches(4)
+    assert eng.counter_syncs == 1 + nb, (
+        f"baseline dispatch synced {eng.counter_syncs}x for {nb} batches; "
+        f"want 1 initial + 1 per batch")
