@@ -15,12 +15,12 @@ import cycles; heavyweight backends only load when first used.
 __all__ = [
     "api", "compile", "bind_graph", "CompiledProgram", "Session",
     "GraphSession", "SessionResult", "PropertyView", "register_engine",
-    "available_backends",
+    "available_backends", "restore_session",
 ]
 
 _API_NAMES = {"compile", "bind_graph", "CompiledProgram", "Session",
               "GraphSession", "SessionResult", "PropertyView",
-              "register_engine", "available_backends"}
+              "register_engine", "available_backends", "restore_session"}
 
 
 def __getattr__(name):

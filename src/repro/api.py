@@ -37,10 +37,13 @@ import pathlib
 from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Union
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
+from repro.ckpt import checkpoint as ckpt
 from repro.core.dsl.codegen import (ArmedRun, CodegenError, Program,
                                     compile_source)
-from repro.core.engine import Engine
+from repro.core.engine import Engine, state_to_csr
 from repro.core.registry import (available_backends, make_engine,
                                  register_engine)
 from repro.graph.csr import CSR
@@ -49,7 +52,7 @@ from repro.graph.updates import UpdateBatch, UpdateStream
 __all__ = [
     "compile", "CompiledProgram", "Session", "GraphSession", "bind_graph",
     "SessionResult", "PropertyView", "register_engine",
-    "available_backends",
+    "available_backends", "restore_session",
 ]
 
 _DEFAULT_CAPACITY = 64
@@ -93,6 +96,40 @@ def _auto_capacity(stream: Optional[UpdateStream] = None,
     if batch is not None:
         return max(_DEFAULT_CAPACITY, 8 * batch.size)
     return _DEFAULT_CAPACITY
+
+
+def _tree_spec(tree):
+    """Per-leaf ``[shape, dtype]`` mirror of a nested-dict array tree —
+    JSON-able, enough to rebuild an example tree for ``ckpt.restore``
+    without needing the (unrecoverable) pickled treedef."""
+    if isinstance(tree, dict):
+        return {k: _tree_spec(v) for k, v in tree.items()}
+    return [list(np.shape(tree)),
+            str(getattr(tree, "dtype", np.asarray(tree).dtype))]
+
+
+def _example_from_spec(spec):
+    if isinstance(spec, dict):
+        return {k: _example_from_spec(v) for k, v in spec.items()}
+    shape, dtype = spec
+    return jnp.zeros(tuple(shape), np.dtype(dtype))
+
+
+def _fit_pad(arr, n_real: int, n_pad: int):
+    """Refit a saved vertex array to the restoring engine's padding
+    (dist n_pad = block·P changes with the device count).  The pad
+    region is dead for forall lowerings — lowering masks them with
+    ``idx < n_real`` — so it is filled from the saved pad value when one
+    exists, else dtype-zero."""
+    arr = jnp.asarray(arr)
+    if arr.ndim == 0 or arr.shape[0] == n_pad:
+        return arr
+    body = arr[:n_real]
+    if n_pad == n_real:
+        return body
+    fill = arr[n_real] if arr.shape[0] > n_real else jnp.zeros((), arr.dtype)
+    return jnp.concatenate(
+        [body, jnp.full((n_pad - n_real,), fill, arr.dtype)])
 
 
 class PropertyView(Mapping):
@@ -167,6 +204,11 @@ class GraphSession:
         self._capacity = capacity
         self._handle = None
         self._props: Dict[str, Any] = {}
+        # last host-observed overflow counter (see _retry_on_overflow)
+        self._of_base = 0
+        # ΔG batches applied through apply()/run_stream() — the resume
+        # position checkpointed by save()
+        self._cursor = 0
 
     # -- resident state ------------------------------------------------------
     @property
@@ -203,21 +245,29 @@ class GraphSession:
             return PropertyView({}, 0)
         return PropertyView(dict(self._props), self._engine.n_real)
 
-    def _overflow_count(self) -> int:
-        return int(np.asarray(
-            self._engine.handle_counters(self._handle))[0])
+    def _sync_counters(self) -> tuple:
+        """ONE host readback of the (overflow, used, dead) pool triple."""
+        return tuple(int(x) for x in
+                     np.asarray(self._engine.handle_counters(self._handle)))
 
     def _retry_on_overflow(self, attempt: Callable[[], None],
                            regrow: Callable[[], None]) -> None:
         """The one grow-on-overflow backstop: run ``attempt()`` (which
         mutates session state); while it raised the overflow counter,
-        ``regrow()`` (roll back + grow the pool) and replay."""
-        of0 = self._overflow_count()
+        ``regrow()`` (roll back + grow the pool) and replay.
+
+        Exactly one counter sync per attempt: the triple is read once
+        *post*-attempt and compared against the running ``_of_base``
+        (the pre+post pair this replaces reintroduced the per-batch host
+        sync PR 6's debt #4 removed from ``run_stream``)."""
         attempt()
-        while self._overflow_count() > of0:
+        of = self._sync_counters()[0]
+        while of > self._of_base:
             regrow()
-            of0 = 0            # grow merges the pool, clearing counters
+            self._of_base = 0  # grow merges the pool, clearing counters
             attempt()
+            of = self._sync_counters()[0]
+        self._of_base = of
 
     # -- structural updates --------------------------------------------------
     def apply(self, batch: UpdateBatch) -> "GraphSession":
@@ -235,6 +285,7 @@ class GraphSession:
             base = self._handle = self._engine.grow(base)
 
         self._retry_on_overflow(attempt, regrow)
+        self._cursor += 1
         return self
 
     # -- hand-staged drivers -------------------------------------------------
@@ -277,12 +328,55 @@ class GraphSession:
         self._ensure_prepared(stream=stream)
         self._handle, carry = self._engine.run_stream(
             self._handle, stream, batch_size, step_fn, carry, **kw)
+        # the fused executor may have grown/merged internally — resync
+        # the overflow base with one triple read
+        self._of_base = self._sync_counters()[0]
+        self._cursor += stream.num_batches(batch_size)
         if isinstance(carry, dict):
             self._props = dict(carry)
         return carry
 
     def to_host(self) -> Dict[str, np.ndarray]:
         return self.props.to_host()
+
+    # -- durability (DESIGN.md §5) -------------------------------------------
+    @property
+    def stream_cursor(self) -> int:
+        """ΔG batches applied through ``apply``/``run_stream`` so far —
+        the resume position recorded by ``save``."""
+        return self._cursor
+
+    def state_tree(self):
+        """Everything a durable restore needs, as one flattenable
+        ``(nested-dict array tree, JSON-able meta)`` pair: the packed
+        graph handle, the device-resident property arrays, and the
+        stream cursor."""
+        self._ensure_prepared()
+        handle_tree, handle_meta = self._engine.pack_state(self._handle)
+        tree = {"handle": handle_tree, "props": dict(self._props)}
+        meta = {"version": 1, "kind": "graph",
+                "backend": self._engine.name,
+                "n": self._engine.n_real, "n_pad": self._engine.n_pad,
+                "handle": handle_meta, "cursor": self._cursor}
+        return tree, meta
+
+    def save(self, ckpt_dir, step: Optional[int] = None, keep: int = 3):
+        """Durably checkpoint the session (atomic-rename commit protocol,
+        see ``repro.ckpt.checkpoint``).  ``step`` defaults to the stream
+        cursor, so successive saves of a streaming session are ordered;
+        returns the committed step directory."""
+        tree, meta = self.state_tree()
+        meta["tree_spec"] = _tree_spec(tree)
+        step = self._cursor if step is None else int(step)
+        return ckpt.save(ckpt_dir, step, tree, extra=meta, keep=keep)
+
+    @staticmethod
+    def restore(ckpt_dir, backend: Optional[str] = None,
+                step: Optional[int] = None, **backend_opts):
+        """Rebuild a session from ``save()`` output — see
+        :func:`restore_session`."""
+        return restore_session(ckpt_dir, backend=backend, step=step,
+                               **backend_opts)
 
 
 class Session(GraphSession):
@@ -409,7 +503,21 @@ class Session(GraphSession):
 
         self._retry_on_overflow(attempt, regrow)
         self._props = armed.device_props()
+        self._cursor += 1
         return self
+
+    # -- durability ----------------------------------------------------------
+    def state_tree(self):
+        """Adds the program identity and (when armed) the serialized
+        Batch-loop position to the GraphSession snapshot."""
+        tree, meta = super().state_tree()
+        meta["kind"] = "session"
+        meta["source"] = self.compiled.program.source
+        if self._armed is not None:
+            arrays, armed_meta = self._armed.serialize()
+            tree["armed"] = arrays
+            meta["armed"] = armed_meta
+        return tree, meta
 
     def run_stream(self, stream: UpdateStream, batch_size: Optional[int] =
                    None, step_fn: Optional[Callable] = None, carry=None,
@@ -482,3 +590,90 @@ class CompiledProgram:
 
     def __repr__(self):
         return f"CompiledProgram(functions={self.functions})"
+
+
+def restore_session(ckpt_dir, backend: Optional[str] = None,
+                    step: Optional[int] = None,
+                    **backend_opts) -> GraphSession:
+    """Reconstruct a session from a checkpoint directory written by
+    ``Session.save`` / ``GraphSession.save``.
+
+    ``step=None`` picks the latest committed step.  ``backend=None``
+    restores onto the backend that saved:
+
+    * same backend kind — **bit-exact**: the raw handle leaves (diff
+      pool, tombstones, ELL pack) are restored, so resumed streaming is
+      bit-identical to the uninterrupted run;
+    * the dist backend re-partitions its canonical edge list onto the
+      *current* mesh — an elastic restore may come back on a different
+      device count (value-exact for order-independent reductions);
+    * naming a **different** backend converts through the canonical
+      alive-edge list and re-``prepare``s (value-preserving, pool
+      layout reset).
+
+    An armed Batch loop resumes exactly where it paused; the prologue is
+    not re-run.  The result is a :class:`Session` when the checkpoint
+    was written by one (program source travels in the manifest),
+    otherwise a :class:`GraphSession`.
+    """
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {ckpt_dir}")
+    meta = ckpt.read_manifest(ckpt_dir, step)["extra"]
+    engine = make_engine(backend or meta["backend"], **backend_opts)
+    example = _example_from_spec(meta["tree_spec"])
+    tree, _ = ckpt.restore(ckpt_dir, step, example)
+    # strip the restore's single-device commitment: the engine re-places
+    # every leaf (dist shards vertex arrays over its own mesh)
+    tree = jax.tree_util.tree_map(np.asarray, tree)
+
+    hmeta = meta["handle"]
+    exact = engine.state_kind == hmeta["kind"]
+    if exact:
+        handle = engine.unpack_state(tree["handle"], hmeta)
+    else:
+        csr, cap = state_to_csr(tree["handle"], hmeta)
+        handle = engine.prepare(csr, diff_capacity=cap)
+    # edge-LANE state only survives when the pool layout does: a dist
+    # restore re-partitions even same-kind, invalidating lane indices
+    lanes_ok = exact and hmeta["kind"] != "dist"
+
+    if meta["kind"] == "session":
+        sess: GraphSession = Session(compile(meta["source"]), engine,
+                                     csr=None)
+    else:
+        sess = GraphSession(engine, csr=None)
+    sess._handle = handle
+    n = int(meta["n"])
+    sess._props = {k: engine.put_vertex_array(_fit_pad(v, n, engine.n_pad))
+                   for k, v in tree.get("props", {}).items()}
+    sess._cursor = int(meta["cursor"])
+
+    armed_meta = meta.get("armed")
+    if armed_meta is not None:
+        arrays = dict(tree.get("armed") or {})
+        for name, m in armed_meta["env"].items():
+            if m["kind"] == "prop" and m.get("bound"):
+                if m["is_edge"] and not lanes_ok:
+                    raise ValueError(
+                        f"armed edge property {name!r} is bound to the "
+                        f"saved pool layout; it cannot survive a "
+                        f"cross-backend restore or a dist re-mesh — "
+                        f"restore onto the saving backend, or disarm "
+                        f"before saving")
+                if not m["is_edge"]:
+                    arrays[f"prop_{name}"] = engine.put_vertex_array(
+                        _fit_pad(arrays[f"prop_{name}"], n, engine.n_pad))
+        staged = sess._staged_funcs.get(armed_meta["func"])
+        if staged is None:
+            staged = sess._staged_funcs[armed_meta["func"]] = \
+                sess.compiled.program.stage(armed_meta["func"], engine)
+        sess._armed = ArmedRun.deserialize(staged, handle, arrays,
+                                           armed_meta)
+        sess._handle = sess._armed.gbox.value
+        sess._props = sess._armed.device_props()
+    # one triple read pins the overflow base for the restored pool
+    sess._of_base = sess._sync_counters()[0]
+    return sess

@@ -6,8 +6,11 @@ Layout:  <dir>/step_<k>/
            COMMITTED            — atomic-rename commit marker
 
 Fault-tolerance contract (DESIGN.md §5):
-  * writes go to step_<k>.tmp and are renamed only after fsync — a
-    preempted save can never corrupt the latest restorable step;
+  * every payload file (shard, manifest) is fsynced before the
+    ``COMMITTED`` marker is created, the tmp directory is fsynced before
+    the rename, and the parent directory is fsynced after it — a crash
+    at ANY point leaves either the previous committed step or the new
+    one, never a ``COMMITTED`` step with a truncated shard;
   * ``latest_step`` ignores uncommitted directories, so restart always
     resumes from the newest complete checkpoint;
   * per-host shard files: on a real cluster each host serializes only its
@@ -21,10 +24,30 @@ import json
 import os
 import pathlib
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
 import jax
+
+# Test seam for the crash-injection suite (tests/test_ckpt_protocol.py):
+# when set, it is called with a named commit-protocol point ("shard",
+# "manifest", "committed", "renamed") and may raise to simulate a kill
+# at exactly that boundary.  None in production.
+_crash_point: Optional[Callable[[str], None]] = None
+
+
+def _maybe_crash(point: str) -> None:
+    if _crash_point is not None:
+        _crash_point(point)
+
+
+def _fsync_dir(path) -> None:
+    """Durably record directory-entry changes (create/rename) on POSIX."""
+    fd = os.open(str(path), os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree):
@@ -43,7 +66,11 @@ def save(ckpt_dir, step: int, tree: Any, extra: Optional[dict] = None,
 
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(tmp / f"shard_{host_id}.npz", **arrays)
+    with open(tmp / f"shard_{host_id}.npz", "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    _maybe_crash("shard")
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
@@ -54,18 +81,38 @@ def save(ckpt_dir, step: int, tree: Any, extra: Optional[dict] = None,
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    (tmp / "COMMITTED").touch()
+    _maybe_crash("manifest")
+    # the marker is created only after BOTH payload files are durable,
+    # and is itself fsynced (file + directory entry) before the rename
+    with open(tmp / "COMMITTED", "w") as f:
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    _maybe_crash("committed")
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)                      # atomic commit
+    _fsync_dir(ckpt_dir)                       # make the rename durable
+    _maybe_crash("renamed")
     _gc(ckpt_dir, keep)
     return final
 
 
+def _committed_dirs(ckpt_dir: pathlib.Path):
+    """Renamed, committed step directories only.  A crash between the
+    marker write and the rename leaves a ``step_*.tmp`` dir that
+    *contains* COMMITTED but was never renamed — the rename is the
+    commit, so those must not count (and their name doesn't parse as a
+    step number)."""
+    return [d for d in ckpt_dir.glob("step_*")
+            if d.is_dir() and not d.name.endswith(".tmp")
+            and (d / "COMMITTED").exists()]
+
+
 def _gc(ckpt_dir: pathlib.Path, keep: int):
-    steps = sorted(d for d in ckpt_dir.glob("step_*")
-                   if d.is_dir() and (d / "COMMITTED").exists())
-    for d in steps[:-keep]:
+    steps = sorted(_committed_dirs(ckpt_dir))
+    doomed = steps if keep <= 0 else steps[:-keep]
+    for d in doomed:
         shutil.rmtree(d, ignore_errors=True)
     for d in ckpt_dir.glob("*.tmp"):
         shutil.rmtree(d, ignore_errors=True)
@@ -75,9 +122,17 @@ def latest_step(ckpt_dir) -> Optional[int]:
     ckpt_dir = pathlib.Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    steps = [int(d.name.split("_")[1]) for d in ckpt_dir.glob("step_*")
-             if d.is_dir() and (d / "COMMITTED").exists()]
+    steps = [int(d.name.split("_")[1]) for d in _committed_dirs(ckpt_dir)]
     return max(steps) if steps else None
+
+
+def read_manifest(ckpt_dir, step: int) -> dict:
+    """The manifest of a committed step (metadata only, no array I/O)."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    if not (d / "COMMITTED").exists():
+        raise FileNotFoundError(f"step {step} in {ckpt_dir} is not a "
+                                f"committed checkpoint")
+    return json.loads((d / "manifest.json").read_text())
 
 
 def restore(ckpt_dir, step: int, example_tree: Any,
@@ -87,18 +142,22 @@ def restore(ckpt_dir, step: int, example_tree: Any,
     the (possibly different-sized) current mesh dictates."""
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    data = np.load(d / f"shard_{host_id}.npz")
     leaves, treedef = _flatten(example_tree)
     assert manifest["n_leaves"] == len(leaves), \
         f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"
     new = []
-    for i, ex in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
-        if hasattr(ex, "sharding") and ex.sharding is not None:
-            try:
-                new.append(jax.device_put(arr.astype(ex.dtype), ex.sharding))
-                continue
-            except Exception:
-                pass
-        new.append(jax.numpy.asarray(arr, dtype=getattr(ex, "dtype", None)))
+    # context-manage the NpzFile: a leaked zip fd per restore starves a
+    # long-lived session pool of descriptors
+    with np.load(d / f"shard_{host_id}.npz") as data:
+        for i, ex in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            if hasattr(ex, "sharding") and ex.sharding is not None:
+                try:
+                    new.append(jax.device_put(arr.astype(ex.dtype),
+                                              ex.sharding))
+                    continue
+                except Exception:
+                    pass
+            new.append(jax.numpy.asarray(arr, dtype=getattr(ex, "dtype",
+                                                            None)))
     return jax.tree_util.tree_unflatten(treedef, new), manifest["extra"]

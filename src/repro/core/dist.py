@@ -294,9 +294,10 @@ class DistEngine(Engine):
         sh = NamedSharding(self.mesh, P(self.axis))
         return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), dg)
 
-    def merge(self, dg: DistGraph,
-              diff_capacity: int | None = None) -> DistGraph:
-        """Gather alive edges host-side, rebuild, re-partition."""
+    def _gather_edges(self, dg: DistGraph):
+        """Host-gather the global alive edge set ``(src, dst, w)`` from
+        the stacked shards — shared by ``merge`` and ``pack_state``
+        (shard-count-independent, so it is also the re-mesh format)."""
         n = dg.n
         srcs, dsts, ws = [], [], []
         for p in range(self.P):
@@ -311,11 +312,51 @@ class DistEngine(Engine):
             es, ed, ew, ea = (np.asarray(x) for x in g.edge_arrays())
             keep = ea
             srcs.append(es[keep]); dsts.append(ed[keep]); ws.append(ew[keep])
-        edges = np.stack([np.concatenate(srcs), np.concatenate(dsts)], 1)
-        csr = build_csr(n, edges, np.concatenate(ws))
+        return (np.concatenate(srcs), np.concatenate(dsts),
+                np.concatenate(ws))
+
+    def merge(self, dg: DistGraph,
+              diff_capacity: int | None = None) -> DistGraph:
+        """Gather alive edges host-side, rebuild, re-partition."""
+        src, dst, w = self._gather_edges(dg)
+        edges = np.stack([src, dst], 1)
+        csr = build_csr(dg.n, edges, w)
         if diff_capacity is None:
             diff_capacity = max(dg.d_src.shape[1], 1)
         return self.prepare(csr, diff_capacity=diff_capacity)
+
+    # -- durable state -----------------------------------------------------
+    # The dist snapshot is the CANONICAL global edge list, not the raw
+    # (P, ...) shard leaves: restore re-partitions onto whatever mesh the
+    # restoring engine owns, so an elastic session can come back on a
+    # different device count.  Consequence (DESIGN.md §5): restore is
+    # value-exact for order-independent reductions (integer min/max —
+    # SSSP), but float sums may re-associate because the pool layout is
+    # rebuilt.
+    state_kind = "dist"
+
+    def pack_state(self, dg: DistGraph):
+        src, dst, w = self._gather_edges(dg)
+        tree = {"src": jnp.asarray(src), "dst": jnp.asarray(dst),
+                "w": jnp.asarray(w)}
+        meta = {"kind": "dist", "n": dg.n,
+                "diff_capacity": int(dg.d_src.shape[1]),
+                "num_shards": self.P}
+        return tree, meta
+
+    def put_vertex_array(self, arr):
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return jax.device_put(jnp.asarray(arr), sh)
+
+    def unpack_state(self, tree, meta) -> DistGraph:
+        src = np.asarray(tree["src"])
+        dst = np.asarray(tree["dst"])
+        w = np.asarray(tree["w"])
+        edges = np.stack([src, dst], 1)
+        csr = build_csr(meta["n"], edges, w)
+        # prepare() blocks over THIS mesh's P — the re-mesh happens here
+        return self.prepare(csr,
+                            diff_capacity=max(int(meta["diff_capacity"]), 1))
 
     # -- streaming executor hooks ------------------------------------------
     def handle_counters(self, dg: DistGraph) -> jax.Array:

@@ -437,6 +437,114 @@ class ArmedRun:
         self.gbox.value = g
         self.frame.ret = ret
 
+    # -- durable form (DESIGN.md §5: armed-frame serialization) --------------
+    def serialize(self) -> Tuple[Dict[str, Any], dict]:
+        """The armed loop position as ``(arrays, meta)``: a flat dict of
+        array leaves plus JSON-able metadata describing every frame
+        binding by kind.  ``deserialize`` rebuilds the paused loop from
+        this WITHOUT re-running the prologue — the durable counterpart
+        of ``snapshot()`` (which holds live Python objects)."""
+        arrays: Dict[str, Any] = {}
+        env_meta: Dict[str, dict] = {}
+        for name, v in self.frame.env.items():
+            if isinstance(v, GraphRef):
+                env_meta[name] = {"kind": "graph"}
+            elif isinstance(v, UpdatesRef):
+                if v.stream is not None:
+                    raise CodegenError(
+                        f"armed frame binds a live update stream "
+                        f"{name!r}; only stream-less (armed) frames "
+                        f"serialize")
+                env_meta[name] = {"kind": "updates", "selector": v.selector}
+            elif isinstance(v, PropRef):
+                env_meta[name] = {"kind": "prop", "elem": v.elem,
+                                  "is_edge": v.is_edge,
+                                  "bound": v.box.value is not None}
+                if v.box.value is not None:
+                    arrays[f"prop_{name}"] = v.box.value
+            elif isinstance(v, NodeIdx):
+                if hasattr(v.idx, "dtype"):
+                    arrays[f"node_{name}"] = v.idx
+                    env_meta[name] = {"kind": "node_array"}
+                else:
+                    env_meta[name] = {"kind": "node", "value": int(v.idx)}
+            elif v is None:
+                env_meta[name] = {"kind": "none"}
+            elif isinstance(v, (bool, int, float, str)):
+                env_meta[name] = {"kind": "py", "value": v}
+            elif hasattr(v, "dtype"):
+                arrays[f"val_{name}"] = v
+                env_meta[name] = {"kind": "array"}
+            else:
+                raise CodegenError(
+                    f"cannot serialize armed binding {name!r} of type "
+                    f"{type(v).__name__}")
+        ret = self.frame.ret
+        if ret is None:
+            ret_meta = {"kind": "none"}
+        elif hasattr(ret, "dtype"):
+            arrays["__ret__"] = ret
+            ret_meta = {"kind": "array"}
+        else:
+            ret_meta = {"kind": "py", "value": ret}
+        meta = {"func": self.staged.func_name,
+                "batch_idx": self.staged.func.body.stmts.index(
+                    self.batch_stmt),
+                "env": env_meta, "ret": ret_meta}
+        return arrays, meta
+
+    @classmethod
+    def deserialize(cls, staged: StagedFunc, g, arrays: Dict[str, Any],
+                    meta: dict) -> "ArmedRun":
+        """Rebuild a paused Batch loop from ``serialize()`` output.  The
+        prologue is NOT re-executed — the frame env is repopulated
+        directly, and the graph box wraps the caller's restored handle
+        ``g`` (shared with the owning session)."""
+        if meta["func"] != staged.func_name:
+            raise CodegenError(
+                f"checkpoint armed {meta['func']!r}, staged function is "
+                f"{staged.func_name!r}")
+        frame = Frame(staged.engine)
+        gbox = Box(g)
+        for name, m in meta["env"].items():
+            kind = m["kind"]
+            if kind == "graph":
+                frame.env[name] = GraphRef(gbox)
+            elif kind == "updates":
+                frame.env[name] = UpdatesRef(None, m.get("selector", "both"))
+            elif kind == "prop":
+                ref = PropRef(name, m["elem"], Box(None),
+                              is_edge=m["is_edge"])
+                if m["bound"]:
+                    ref.box.value = jnp.asarray(arrays[f"prop_{name}"],
+                                                ref.dtype)
+                frame.env[name] = ref
+            elif kind == "node":
+                frame.env[name] = NodeIdx(m["value"])
+            elif kind == "node_array":
+                frame.env[name] = NodeIdx(jnp.asarray(arrays[f"node_{name}"]))
+            elif kind == "none":
+                frame.env[name] = None
+            elif kind == "py":
+                frame.env[name] = m["value"]
+            elif kind == "array":
+                frame.env[name] = jnp.asarray(arrays[f"val_{name}"])
+            else:
+                raise CodegenError(f"unknown serialized binding kind "
+                                   f"{kind!r} for {name!r}")
+        rm = meta["ret"]
+        frame.ret = (None if rm["kind"] == "none" else
+                     jnp.asarray(arrays["__ret__"]) if rm["kind"] == "array"
+                     else rm["value"])
+        stmts = staged.func.body.stmts
+        bi = meta["batch_idx"]
+        if not (0 <= bi < len(stmts) and isinstance(stmts[bi], A.BatchStmt)):
+            raise CodegenError(
+                f"checkpoint batch_idx {bi} does not name a Batch "
+                f"statement in {staged.func_name!r} — program source "
+                f"changed since the save")
+        return cls(staged, frame, gbox, stmts[bi], stmts[bi + 1:])
+
 
 def _elem(t: A.Type) -> str:
     return {"int": "int", "long": "int", "float": "float",

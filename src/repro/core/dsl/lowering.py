@@ -978,8 +978,12 @@ def _stage_post_items(ex, items: List[A.Stmt], frame) -> List[Callable]:
                         val = INF_W
                     sets.append((kw.name, val, ref.dtype))
 
-                def attach(props, sets=sets, n=engine.n_pad):
+                def attach(props, sets=sets):
                     props = dict(props)
+                    # size off the carry's own vertex length, not the
+                    # engine's n_pad: under dist's shard_map the props
+                    # in flight are (block,)-local shards
+                    n = props["_real"].shape[0]
                     for name, val, dt in sets:
                         props[name] = jnp.full((n,), val, dt)
                     return props

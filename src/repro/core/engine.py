@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ir import EdgeSweep, Reduce
-from repro.graph.csr import CSR, INT, INF_W
+from repro.graph.csr import CSR, INT, INF_W, build_csr
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph, BOOL
 from repro.graph.updates import UpdateBatch
@@ -195,6 +195,30 @@ class Engine:
         """The engine facade handed to stream steps (see _StreamView)."""
         return _StreamView(self, bounds)
 
+    # -- durable state (DESIGN.md §5: session durability contract) ---------
+    # Every engine exposes its resident handle as a (nested-dict array
+    # tree, JSON-able meta) pair.  ``state_kind`` names the tree layout;
+    # a same-kind ``unpack_state`` is *bit-exact* (raw leaves restored,
+    # pool layout preserved), while a cross-kind restore goes through the
+    # module-level ``state_to_csr`` + ``prepare`` (value-preserving, pool
+    # layout reset).
+
+    state_kind = "none"
+
+    def pack_state(self, handle) -> Tuple[Dict[str, Any], dict]:
+        """Flattenable snapshot of the resident graph handle."""
+        raise NotImplementedError
+
+    def unpack_state(self, tree: Dict[str, Any], meta: dict):
+        """Rebuild a handle from ``pack_state`` output on THIS engine;
+        must also restore the engine's host-side shape state (_n)."""
+        raise NotImplementedError
+
+    def put_vertex_array(self, arr) -> jax.Array:
+        """Place a restored (n_pad,) vertex property the way this
+        engine's lowerings expect it (dist: sharded over the mesh)."""
+        return jnp.asarray(arr)
+
     def static_wedge_bounds(self, handle):
         """Host-static (max_main_deg, max_diff_deg) loop bounds usable
         inside a jitted stream segment.  The main region's offsets only
@@ -319,6 +343,48 @@ class Engine:
         return props
 
 
+# ---------------------------------------------------------------------------
+# Durable-state helpers shared by every backend
+# ---------------------------------------------------------------------------
+
+_DYN_FIELDS = tuple(f.name for f in dataclasses.fields(DynGraph)
+                    if f.name != "n")
+
+
+def dyn_state(g: DynGraph) -> Dict[str, jax.Array]:
+    """A DynGraph's array leaves as a flat dict (the 'dyn' tree layout)."""
+    return {f: getattr(g, f) for f in _DYN_FIELDS}
+
+
+def dyn_from_state(tree: Dict[str, Any], n: int) -> DynGraph:
+    return DynGraph(**{f: jnp.asarray(tree[f]) for f in _DYN_FIELDS}, n=n)
+
+
+def state_to_csr(tree: Dict[str, Any], meta: dict) -> Tuple[CSR, int]:
+    """Collapse ANY engine's packed state to ``(CSR, diff_capacity)`` —
+    the cross-backend restore path.  Value-preserving (the alive edge
+    set survives exactly) but pool-layout-resetting: the target engine
+    re-``prepare``s, so float summation order may differ from the saved
+    run (DESIGN.md §5)."""
+    kind, n = meta["kind"], meta["n"]
+    if kind == "dist":
+        src = np.asarray(tree["src"])
+        dst = np.asarray(tree["dst"])
+        w = np.asarray(tree["w"])
+        cap = int(meta["diff_capacity"])
+    elif kind in ("dyn", "pallas", "frontier"):
+        g = dyn_from_state(tree if kind == "dyn" else tree["g"], n)
+        es, ed, ew, ea = (np.asarray(x) for x in g.edge_arrays())
+        keep = ea
+        src, dst, w = es[keep], ed[keep], ew[keep]
+        cap = g.diff_capacity
+    else:
+        raise ValueError(f"unknown packed-state kind {kind!r}")
+    edges = np.stack([src, dst], axis=1) if len(src) else \
+        np.zeros((0, 2), np.int64)
+    return build_csr(n, edges, w), max(cap, 1)
+
+
 # ===========================================================================
 # JnpEngine — single-device XLA (the OpenMP analogue)
 # ===========================================================================
@@ -349,6 +415,16 @@ class JnpEngine(Engine):
 
     def out_degrees(self, g: DynGraph) -> jax.Array:
         return g.out_degrees()
+
+    # -- durable state -----------------------------------------------------
+    state_kind = "dyn"
+
+    def pack_state(self, g: DynGraph):
+        return dyn_state(g), {"kind": "dyn", "n": g.n}
+
+    def unpack_state(self, tree, meta) -> DynGraph:
+        self._n = meta["n"]
+        return dyn_from_state(tree, meta["n"])
 
     # -- core sweep --------------------------------------------------------
     def _run_sweep(self, g: DynGraph, sw: EdgeSweep, props: Props) -> Props:

@@ -36,13 +36,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (JnpEngine, Collectives, Props,
-    _StreamView)
+    _StreamView, dyn_state, dyn_from_state)
 from repro.core.ir import EdgeSweep
 from repro.graph.csr import CSR, INT, INF_W
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph
 from repro.graph.updates import UpdateBatch
-from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del)
+from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del,
+                               ell_state, ell_from_state)
 from repro.kernels.ell import pack_push_ell as _pack_push_ell_raw
 pack_push_ell = jax.jit(_pack_push_ell_raw, static_argnums=(1, 2))
 
@@ -96,6 +97,25 @@ class FrontierEngine(JnpEngine):
 
     def out_degrees(self, h: FrontierHandle) -> jax.Array:
         return h.g.out_degrees()
+
+    # -- durable state -----------------------------------------------------
+    # Like PallasEngine, the push pack travels RAW so resume keeps the
+    # exact slot layout (and hence summation order) of the saved run.
+    state_kind = "frontier"
+
+    def pack_state(self, h: FrontierHandle):
+        return ({"g": dyn_state(h.g), "push": ell_state(h.push)},
+                {"kind": "frontier", "n": h.g.n, "k": self.k})
+
+    def unpack_state(self, tree, meta) -> FrontierHandle:
+        if meta["k"] != self.k:
+            raise ValueError(
+                f"checkpoint was saved with k={meta['k']} lanes per row; "
+                f"this engine has k={self.k} — bind the restoring engine "
+                f"with the same k (or restore cross-backend)")
+        self._n = meta["n"]
+        return FrontierHandle(g=dyn_from_state(tree["g"], meta["n"]),
+                              push=ell_from_state(tree["push"], meta["n"]))
 
     def update_del(self, h: FrontierHandle, batch: UpdateBatch):
         g = super().update_del(h.g, batch)

@@ -35,12 +35,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ir import EdgeSweep
-from repro.core.engine import JnpEngine, Collectives, Props
+from repro.core.engine import (JnpEngine, Collectives, Props, dyn_state,
+                               dyn_from_state)
 from repro.graph.csr import CSR, INT, INF_W
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph
 from repro.graph.updates import UpdateBatch
-from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del)
+from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del,
+                               ell_state, ell_from_state)
 from repro.kernels.ell import pack_ell as _pack_ell_raw
 pack_ell = jax.jit(_pack_ell_raw, static_argnums=(1, 2))
 from repro.kernels import ops as kops
@@ -52,6 +54,8 @@ from repro.kernels import pallas_repair as FK
 class PallasHandle:
     g: DynGraph
     ell: Ell
+
+
 
 
 @functools.lru_cache(maxsize=None)
@@ -102,6 +106,26 @@ class PallasEngine(JnpEngine):
 
     def out_degrees(self, h: PallasHandle) -> jax.Array:
         return h.g.out_degrees()
+
+    # -- durable state -----------------------------------------------------
+    # The Ell pack is saved RAW (not rebuilt on restore): repacking would
+    # reassign slots, and float32 segment sums over the lanes depend on
+    # slot order — saving the pack is what makes resume bit-exact.
+    state_kind = "pallas"
+
+    def pack_state(self, h: PallasHandle):
+        return ({"g": dyn_state(h.g), "ell": ell_state(h.ell)},
+                {"kind": "pallas", "n": h.g.n, "k": self.k})
+
+    def unpack_state(self, tree, meta) -> PallasHandle:
+        if meta["k"] != self.k:
+            raise ValueError(
+                f"checkpoint was saved with k={meta['k']} lanes per row; "
+                f"this engine has k={self.k} — bind the restoring engine "
+                f"with the same k (or restore cross-backend)")
+        self._n = meta["n"]
+        return PallasHandle(g=dyn_from_state(tree["g"], meta["n"]),
+                            ell=ell_from_state(tree["ell"], meta["n"]))
 
     def update_del(self, h: PallasHandle, batch: UpdateBatch) -> PallasHandle:
         g = super().update_del(h.g, batch)

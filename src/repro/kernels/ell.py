@@ -54,6 +54,21 @@ class Ell:
         return int(self.ell_src.shape[1])
 
 
+_ELL_FIELDS = tuple(f.name for f in dataclasses.fields(Ell)
+                    if f.name != "n")
+
+
+def ell_state(e: Ell) -> dict:
+    """An Ell pack's array leaves as a flat dict (for engine pack_state:
+    the pack is checkpointed raw so restore keeps the exact slot layout,
+    and with it the float summation order, of the saved run)."""
+    return {f: getattr(e, f) for f in _ELL_FIELDS}
+
+
+def ell_from_state(tree: dict, n: int) -> Ell:
+    return Ell(**{f: jnp.asarray(tree[f]) for f in _ELL_FIELDS}, n=n)
+
+
 def ell_capacity(n: int, e_cap: int, k: int, row_tile: int = 128) -> int:
     r = n + -(-e_cap // k)
     return -(-r // row_tile) * row_tile

@@ -49,3 +49,32 @@ def run_elastic(train_fn, args, max_restarts: int = 3,
             if getattr(args, "fail_at", None) is not None:
                 args.fail_at = None          # injected faults fire once
             time.sleep(backoff_s)
+
+
+def run_elastic_session(make_session, work_fn, max_restarts: int = 3,
+                        backoff_s: float = 0.0):
+    """Tear-down → re-mesh → restore loop for ``repro.api`` sessions.
+
+    ``make_session(attempt)`` builds the session for the given attempt —
+    typically ``attempt == 0`` binds fresh and every retry calls
+    ``repro.api.restore_session(ckpt_dir, ...)``, which re-partitions
+    dist state onto whatever devices survived (the re-mesh).
+    ``work_fn(session)`` must be resumable: consult
+    ``session.stream_cursor`` to skip already-applied ΔG batches.  On a
+    transient failure (RuntimeError/OSError — collective timeout, lost
+    host) the session is dropped and rebuilt from the latest committed
+    checkpoint; the atomic-rename commit protocol guarantees one exists.
+    """
+    attempt = 0
+    while True:
+        sess = make_session(attempt)
+        try:
+            return work_fn(sess)
+        except (RuntimeError, OSError) as e:
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            print(f"[elastic] failure: {e!r}; rebuilding session "
+                  f"{attempt}/{max_restarts} from latest checkpoint")
+            if backoff_s:
+                time.sleep(backoff_s * attempt)

@@ -366,6 +366,96 @@ def assert_tc_stream(backend: str, sc: Scenario, segment_size: int = 4):
         f"[{sc.name}] session tc run_stream {int(count)} != oracle {ref}"
 
 
+def assert_sssp_save_restore(backend: str, sc: Scenario, ckpt_dir,
+                             restore_backend: str = None,
+                             restore_opts: dict = None):
+    """Durability cell: arm DynSSSP, apply the first half of the stream,
+    ``save``, ``restore_session``, apply the rest — the final ``dist``
+    must be bit-identical to the uninterrupted armed run, and
+    oracle-exact.  ``restore_backend`` names a different backend to
+    restore onto (cross-backend / elastic cells); SSSP's int-min fold is
+    order-independent, so the bit-exact contract holds across backends
+    and across dist re-partitioning."""
+    restore_opts = restore_opts or {}
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    batches = list(sc.stream.batches(sc.batch_size))
+    k = max(1, len(batches) // 2)
+
+    # uninterrupted reference: one armed session over every batch
+    ref_sess = program("sssp").bind(csr, backend=backend,
+                                    capacity=sc.diff_capacity)
+    ref_sess.run("DynSSSP", batchSize=sc.batch_size, src=sc.src)
+    for b in batches:
+        ref_sess.apply(b)
+    ref = np.asarray(ref_sess.props.host("dist"))
+
+    # interrupted: save after k batches, drop everything, restore, finish
+    sess = program("sssp").bind(csr, backend=backend,
+                                capacity=sc.diff_capacity)
+    sess.run("DynSSSP", batchSize=sc.batch_size, src=sc.src)
+    for b in batches[:k]:
+        sess.apply(b)
+    sess.save(ckpt_dir)
+    del sess
+
+    res = api.restore_session(ckpt_dir, backend=restore_backend,
+                              **restore_opts)
+    assert res.armed, f"[{sc.name}] restore must re-arm the Batch loop"
+    assert res.stream_cursor == k, \
+        f"[{sc.name}] cursor {res.stream_cursor} != batches applied {k}"
+    for b in batches[k:]:
+        res.apply(b)
+    got = np.asarray(res.props.host("dist"))
+    np.testing.assert_array_equal(
+        got, ref,
+        err_msg=f"[{sc.name}] save/restore DynSSSP != uninterrupted "
+                f"({backend} -> {restore_backend or backend})")
+
+    e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                         sc.stream.adds, sc.stream.dels)
+    oracle = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
+    np.testing.assert_array_equal(
+        np.minimum(got.astype(np.int64), oracles.INF), oracle,
+        err_msg=f"[{sc.name}] save/restore DynSSSP != oracle")
+
+
+def assert_pagerank_save_restore(backend: str, sc: Scenario, ckpt_dir,
+                                 beta=1e-4, delta=0.85, max_iter=100):
+    """Float bit-exactness cell: same-backend save/restore must resume
+    PageRank *bit-identically* — raw handle leaves (diff pool layout,
+    ELL pack) are restored, so float summation order is preserved.
+    Same-backend only: dist re-meshes and cross-backend converts, which
+    keeps values but not float bit patterns."""
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    args = {"batchSize": sc.batch_size, "beta": beta, "delta": delta,
+            "maxIter": max_iter}
+    batches = list(sc.stream.batches(sc.batch_size))
+    k = max(1, len(batches) // 2)
+
+    ref_sess = program("pagerank").bind(csr, backend=backend,
+                                        capacity=sc.diff_capacity)
+    ref_sess.run("DynPR", **args)
+    for b in batches:
+        ref_sess.apply(b)
+    ref = np.asarray(ref_sess.props.host("pageRank"))
+
+    sess = program("pagerank").bind(csr, backend=backend,
+                                    capacity=sc.diff_capacity)
+    sess.run("DynPR", **args)
+    for b in batches[:k]:
+        sess.apply(b)
+    sess.save(ckpt_dir)
+    del sess
+
+    res = api.restore_session(ckpt_dir)
+    for b in batches[k:]:
+        res.apply(b)
+    np.testing.assert_array_equal(
+        np.asarray(res.props.host("pageRank")), ref,
+        err_msg=f"[{sc.name}] save/restore DynPR not bit-exact on "
+                f"{backend}")
+
+
 def assert_tc(backend: str, sc: Scenario):
     csr = build_csr(sc.n, sc.edges, sc.w)
     args = {"updateBatch": sc.stream, "batchSize": sc.batch_size}

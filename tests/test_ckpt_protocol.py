@@ -1,0 +1,184 @@
+"""Crash-injection suite for the checkpoint commit protocol.
+
+The protocol (DESIGN.md §5) claims: a kill at ANY point during
+``ckpt.save`` leaves either the previous committed step or the new one
+fully restorable — never a COMMITTED step with missing or truncated
+payloads.  These tests simulate the kill at each commit-protocol
+boundary via the ``ckpt._crash_point`` seam ("shard" = after the shard
+npz is durable, "manifest" = after the manifest, "committed" = after
+the marker but before the rename, "renamed" = after the rename but
+before gc) and assert ``latest_step`` always names a restorable step.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+
+POINTS = ["shard", "manifest", "committed", "renamed"]
+
+
+class _Kill(Exception):
+    """Simulated preemption."""
+
+
+def _tree(step):
+    return {"a": jnp.arange(4, dtype=jnp.int32) + step,
+            "b": jnp.full((2, 3), float(step), jnp.float32)}
+
+
+def _save(d, step, point=None):
+    """Save step; if `point` is given, die at that protocol boundary."""
+    if point is None:
+        ckpt.save(d, step, _tree(step), extra={"cursor": step})
+        return
+
+    def boom(p):
+        if p == point:
+            raise _Kill(p)
+
+    ckpt._crash_point = boom
+    try:
+        with pytest.raises(_Kill):
+            ckpt.save(d, step, _tree(step), extra={"cursor": step})
+    finally:
+        ckpt._crash_point = None
+
+
+def _assert_restorable(d, step):
+    """The step must restore completely, values intact."""
+    tree, extra = ckpt.restore(d, step, _tree(0))
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.arange(4, dtype=np.int32) + step)
+    np.testing.assert_array_equal(np.asarray(tree["b"]),
+                                  np.full((2, 3), float(step), np.float32))
+    assert extra["cursor"] == step
+    assert ckpt.read_manifest(d, step)["extra"]["cursor"] == step
+
+
+@pytest.mark.parametrize("point", POINTS)
+def test_crash_keeps_previous_step_restorable(point, tmp_path):
+    _save(tmp_path, 1)
+    _save(tmp_path, 2, point=point)
+    latest = ckpt.latest_step(tmp_path)
+    # the rename is the commit: before it the new step is invisible,
+    # after it the new step is the one restarts resume from
+    assert latest == (2 if point == "renamed" else 1)
+    _assert_restorable(tmp_path, latest)
+
+
+@pytest.mark.parametrize("point", POINTS)
+def test_crash_on_first_checkpoint(point, tmp_path):
+    _save(tmp_path, 1, point=point)
+    latest = ckpt.latest_step(tmp_path)
+    if point == "renamed":
+        assert latest == 1
+        _assert_restorable(tmp_path, 1)
+    else:
+        assert latest is None
+
+
+@pytest.mark.parametrize("point", POINTS)
+def test_retry_after_crash_commits(point, tmp_path):
+    """An elastic restart re-saves the same step after restoring: the
+    leftover tmp (or already-renamed dir) must not wedge the retry."""
+    _save(tmp_path, 1)
+    _save(tmp_path, 2, point=point)
+    _save(tmp_path, 2)                 # clean retry
+    assert ckpt.latest_step(tmp_path) == 2
+    _assert_restorable(tmp_path, 2)
+    # retry's gc swept the crashed attempt's tmp dir
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_marker_written_only_after_payloads(tmp_path):
+    """Record tmp-dir contents at each boundary: COMMITTED must not
+    exist until both the shard and the manifest are durable."""
+    seen = {}
+
+    def probe(p):
+        tmp = tmp_path / "step_00000001.tmp"
+        seen[p] = {f.name for f in tmp.iterdir()} if tmp.exists() else None
+
+    ckpt._crash_point = probe
+    try:
+        ckpt.save(tmp_path, 1, _tree(1))
+    finally:
+        ckpt._crash_point = None
+    assert "COMMITTED" not in seen["shard"]
+    assert "shard_0.npz" in seen["shard"]
+    assert "COMMITTED" not in seen["manifest"]
+    assert {"shard_0.npz", "manifest.json"} <= seen["manifest"]
+    assert {"shard_0.npz", "manifest.json", "COMMITTED"} <= seen["committed"]
+    assert seen["renamed"] is None     # tmp is gone once renamed
+
+
+def test_unrenamed_tmp_with_marker_is_not_committed(tmp_path):
+    """The crash-at-'committed' state: step_N.tmp contains COMMITTED but
+    was never renamed.  latest_step must neither count it nor crash on
+    its unparseable name, and read_manifest must refuse the step."""
+    _save(tmp_path, 1)
+    _save(tmp_path, 2, point="committed")
+    tmp = tmp_path / "step_00000002.tmp"
+    assert tmp.is_dir() and (tmp / "COMMITTED").exists()
+    assert ckpt.latest_step(tmp_path) == 1
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_manifest(tmp_path, 2)
+
+
+def test_latest_step_ignores_marker_less_dirs(tmp_path):
+    _save(tmp_path, 3)
+    bare = tmp_path / "step_00000007"
+    bare.mkdir()
+    (bare / "manifest.json").write_text("{}")
+    assert ckpt.latest_step(tmp_path) == 3
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_manifest(tmp_path, 7)
+
+
+def test_gc_keep_zero_prunes_everything(tmp_path):
+    for s in (1, 2, 3):
+        _save(tmp_path, s)
+    ckpt._gc(tmp_path, keep=0)
+    assert ckpt.latest_step(tmp_path) is None
+    assert not list(tmp_path.glob("step_*"))
+
+
+def test_save_keeps_last_k_steps(tmp_path):
+    for s in range(1, 6):
+        ckpt.save(tmp_path, s, _tree(s), extra={"cursor": s}, keep=3)
+    steps = sorted(int(d.name.split("_")[1])
+                   for d in tmp_path.glob("step_*"))
+    assert steps == [3, 4, 5]
+    _assert_restorable(tmp_path, 5)
+
+
+def test_gc_after_crash_before_gc(tmp_path):
+    """'renamed' kills save after commit but before gc: stale steps
+    linger, and the *next* successful save sweeps them."""
+    for s in (1, 2):
+        ckpt.save(tmp_path, s, _tree(s), keep=2)
+    _save(tmp_path, 3, point="renamed")
+    assert ckpt.latest_step(tmp_path) == 3
+    ckpt.save(tmp_path, 4, _tree(4), keep=2)
+    steps = sorted(int(d.name.split("_")[1])
+                   for d in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_restore_closes_shard_file(tmp_path):
+    """restore() must not leak the NpzFile's zip descriptor — a
+    long-lived elastic session restores many times from one pool."""
+    _save(tmp_path, 1)
+    ckpt.restore(tmp_path, 1, _tree(0))
+    shard = os.path.realpath(tmp_path / "step_00000001" / "shard_0.npz")
+    open_fds = []
+    for fd in os.listdir("/proc/self/fd"):
+        try:
+            if os.path.realpath(f"/proc/self/fd/{fd}") == shard:
+                open_fds.append(fd)
+        except OSError:
+            pass
+    assert not open_fds, f"shard npz still open after restore: {open_fds}"

@@ -13,9 +13,11 @@ fast lane; the rest carry the `slow` marker and run in the full lane.
 """
 import pytest
 
-from conformance import (assert_pagerank, assert_pagerank_stream,
-                         assert_sssp, assert_sssp_stream, assert_tc,
-                         assert_tc_stream, digraph_scenario, sym_scenario)
+from conformance import (assert_pagerank, assert_pagerank_save_restore,
+                         assert_pagerank_stream, assert_sssp,
+                         assert_sssp_save_restore, assert_sssp_stream,
+                         assert_tc, assert_tc_stream, digraph_scenario,
+                         sym_scenario)
 
 BACKENDS = ["jnp", "dist", "pallas"]
 
@@ -102,3 +104,45 @@ def test_stream_conformance_pagerank(scenario, backend):
                                 fast=DIST_STREAM_FAST, prefix="stream-"))
 def test_stream_conformance_tc(scenario, backend):
     assert_tc_stream(backend, sym_scenario(scenario))
+
+
+# ---------------------------------------------------------------------------
+# Durability cells: arm the Batch loop, apply half the stream, save,
+# restore from disk, apply the rest — bit-identical to the uninterrupted
+# armed run (see conformance.assert_sssp_save_restore).  Every registered
+# backend gets a cell; dist's pays its shard_map tracing cost twice (the
+# saving and the restored engine both trace), so it rides the slow lane
+# alongside pallas_chained per the _MOSTLY_SLOW convention.
+# ---------------------------------------------------------------------------
+
+DURABLE_BACKENDS = ["jnp", "dist", "pallas", "pallas_chained", "frontier"]
+
+
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(["batch8"], DURABLE_BACKENDS, fast=set(),
+                                prefix="ckpt-"))
+def test_conformance_sssp_save_restore(scenario, backend, tmp_path):
+    assert_sssp_save_restore(backend, digraph_scenario(scenario), tmp_path)
+
+
+# float bit-exactness: raw-leaf restore preserves the diff-pool layout
+# and ELL pack, so resumed PageRank is bit-identical, not just close
+@pytest.mark.parametrize("scenario,backend",
+                         _cells(["batch8"], ["jnp", "pallas"], fast=set(),
+                                prefix="ckpt-"))
+def test_conformance_pagerank_save_restore(scenario, backend, tmp_path):
+    assert_pagerank_save_restore(backend, digraph_scenario(scenario),
+                                 tmp_path)
+
+
+# cross-backend restore: the checkpoint converts through the canonical
+# alive-edge list; SSSP's int-min fold makes the contract still bit-exact
+@pytest.mark.parametrize("save_backend,restore_backend",
+                         [pytest.param("jnp", "pallas",
+                                       id="ckpt-jnp-to-pallas"),
+                          pytest.param("pallas", "jnp",
+                                       id="ckpt-pallas-to-jnp")])
+def test_conformance_cross_backend_restore(save_backend, restore_backend,
+                                           tmp_path):
+    assert_sssp_save_restore(save_backend, digraph_scenario("batch8"),
+                             tmp_path, restore_backend=restore_backend)

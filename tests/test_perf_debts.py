@@ -11,6 +11,11 @@
      grow-and-replay retry — stacked once per segment window now;
   #4 baseline ``Engine.run_stream`` synced the pool counters twice per
      batch — one (overflow, used, dead) read per batch now.
+
+Plus #5 (PR 7): session ``apply`` read the (overflow, used, dead)
+triple twice per attempt (a pre-read to establish the baseline and a
+post-read to detect overflow) — ``_retry_on_overflow`` now reads it
+ONCE post-attempt against the running ``_of_base``.
 """
 import dataclasses
 
@@ -144,3 +149,39 @@ def test_baseline_run_stream_syncs_counters_once_per_batch():
     assert eng.counter_syncs == 1 + nb, (
         f"baseline dispatch synced {eng.counter_syncs}x for {nb} batches; "
         f"want 1 initial + 1 per batch")
+
+
+# ---------------------------------------------------------------------------
+# #5: one counter sync per session apply (armed and structural)
+# ---------------------------------------------------------------------------
+
+def test_session_apply_syncs_counters_once_per_apply():
+    import repro.api as api
+    from repro.dsl_programs import path as program_path
+
+    csr = _graph(seed=19)
+    ups = random_updates(csr, percent=15, seed=9)
+    batches = list(ups.batches(4))
+
+    # armed DSL applies: the ΔG hot path of a long-lived session
+    eng = _SyncCountingJnp()
+    sess = api.Session(api.compile(program_path("sssp")), eng, csr,
+                       capacity=64)                # ample: no replays
+    sess.run("DynSSSP", batchSize=4, src=0)
+    eng.counter_syncs = 0
+    for b in batches:
+        sess.apply(b)
+    assert eng.counter_syncs == len(batches), (
+        f"armed apply synced {eng.counter_syncs}x for {len(batches)} "
+        f"batches; want exactly one post-attempt read per apply")
+
+    # structural applies go through the same _retry_on_overflow
+    eng2 = _SyncCountingJnp()
+    gsess = api.GraphSession(eng2, csr, capacity=64)
+    gsess.apply(batches[0])                        # prepares lazily
+    eng2.counter_syncs = 0
+    for b in batches[1:]:
+        gsess.apply(b)
+    assert eng2.counter_syncs == len(batches) - 1, (
+        f"structural apply synced {eng2.counter_syncs}x for "
+        f"{len(batches) - 1} batches; want one per apply")
