@@ -1,0 +1,92 @@
+"""Guarded-vs-unguarded streaming: what does admission cost?
+
+The ISSUE 8 acceptance row: the ΔG admission guard runs ONE vectorized
+host pass over the raw stream arrays before the fused executor launches,
+so a clean stream (the serving common case) must pay < 5% overhead
+versus ``admission="off"`` (the pre-PR-8 behavior).  Each backend gets a
+``stream_unguarded_*`` / ``stream_guarded_*`` pair plus the isolated
+host-pass cost; the 5% gate is *warn-only* (CI smoke prints a WARNING
+line instead of failing — CPU wall clocks are noisy).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+import common
+from common import emit
+
+import repro.api as api
+from repro.graph import build_csr, random_updates
+from repro.graph.csr import rmat_graph
+from repro.runtime.admission import stream_batch_violations
+
+OVERHEAD_GATE_PCT = 5.0
+
+
+def _graph(small: bool):
+    scale = 11 if small else 14
+    n, edges, w = rmat_graph(scale, 8, seed=7)
+    keep = edges[:, 0] != edges[:, 1]
+    return build_csr(n, edges[keep], w[keep])
+
+
+def _step(view, h, batch, carry):
+    h = view.update_del(h, batch)
+    h = view.update_add(h, batch)
+    return h, carry
+
+
+def _time_stream(csr, stream, bs, backend, policy, iters=3):
+    """Median run_stream wall time (fresh session per iter; bind/prepare
+    and the shared jit cache stay outside the timed region)."""
+    ts = []
+    for i in range(iters + 1):
+        sess = api.bind_graph(csr, backend=backend, admission=policy)
+        sess.handle                              # prepare untimed
+        t0 = time.perf_counter()
+        sess.run_stream(stream, bs, _step, None)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, sess.handle)
+        if i:                                    # drop tracing warmup
+            ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def run(small: bool = True, quick: bool = False,
+        backends=("jnp", "pallas")) -> None:
+    if quick:
+        backends = ("jnp",)
+    csr = _graph(small)
+    stream = random_updates(csr, percent=20, seed=13)
+    bs = max(1, stream.num_adds // 16)
+    nb = stream.num_batches(bs)
+
+    # the guard's actual work, isolated: one host pass over raw arrays
+    t0 = time.perf_counter()
+    for _ in range(5):
+        assert not stream_batch_violations(stream, bs, csr.n)
+    host_pass_us = (time.perf_counter() - t0) / 5 * 1e6
+    emit("admission_host_pass", host_pass_us,
+         f"batches={nb};rows={stream.num_adds + stream.num_dels}")
+
+    for backend in backends:
+        off = _time_stream(csr, stream, bs, backend, "off")
+        clamp = _time_stream(csr, stream, bs, backend, "clamp")
+        pct = (clamp - off) / off * 100.0
+        emit(f"stream_unguarded_{backend}", off, f"batches={nb}")
+        emit(f"stream_guarded_{backend}", clamp,
+             f"batches={nb};overhead_pct={pct:.2f}")
+        if pct > OVERHEAD_GATE_PCT:
+            print(f"WARNING: admission overhead {pct:.2f}% on {backend} "
+                  f"exceeds the {OVERHEAD_GATE_PCT}% gate (warn-only)",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    common.reset_results()
+    run(small=True)
+    common.write_json("robustness")

@@ -11,6 +11,8 @@
                       efficiency per row (ISSUE 6 tentpole scorecard)
   roofline            §Roofline terms per (arch × shape × mesh) from the
                       dry-run artifacts (reads benchmarks/results/dryrun.json)
+  robustness          guarded vs unguarded streaming (ΔG admission guard
+                      overhead; ISSUE 8 < 5% gate, warn-only)
 
 Output: ``name,us_per_call,derived`` CSV lines on stdout AND a
 machine-readable ``BENCH_<suite>.json`` at the repo root per suite run —
@@ -34,7 +36,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "dynamic_vs_static", "stream", "tc",
                              "merge_policy", "scheduling", "static_baselines",
-                             "pallas", "roofline"])
+                             "pallas", "roofline", "robustness"])
     ap.add_argument("--small", action="store_true", default=True,
                     help="reduced graph sizes (CI-speed; default on CPU)")
     ap.add_argument("--full", dest="small", action="store_false",
@@ -81,6 +83,10 @@ def main() -> None:
     if args.suite in ("all", "roofline"):
         import roofline
         suite("roofline", roofline.run)
+    if args.suite in ("all", "robustness"):
+        import robustness
+        suite("robustness", lambda: robustness.run(small=args.small,
+                                                   quick=args.quick))
 
 
 if __name__ == "__main__":

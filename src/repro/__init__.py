@@ -16,11 +16,15 @@ __all__ = [
     "api", "compile", "bind_graph", "CompiledProgram", "Session",
     "GraphSession", "SessionResult", "PropertyView", "register_engine",
     "available_backends", "restore_session",
+    "AdmissionError", "PoolOverflowError", "KernelFailure",
+    "DivergenceError", "SessionHealth",
 ]
 
 _API_NAMES = {"compile", "bind_graph", "CompiledProgram", "Session",
               "GraphSession", "SessionResult", "PropertyView",
-              "register_engine", "available_backends", "restore_session"}
+              "register_engine", "available_backends", "restore_session",
+              "AdmissionError", "PoolOverflowError", "KernelFailure",
+              "DivergenceError", "SessionHealth"}
 
 
 def __getattr__(name):

@@ -44,15 +44,24 @@ from repro.ckpt import checkpoint as ckpt
 from repro.core.dsl.codegen import (ArmedRun, CodegenError, Program,
                                     compile_source)
 from repro.core.engine import Engine, state_to_csr
-from repro.core.registry import (available_backends, make_engine,
-                                 register_engine)
+from repro.core.registry import (available_backends, failover_chain,
+                                 make_engine, register_engine)
 from repro.graph.csr import CSR
 from repro.graph.updates import UpdateBatch, UpdateStream
+from repro.runtime import faults as _faults
+from repro.runtime import watchdog as _watchdog
+from repro.runtime.admission import DEFAULT_MAX_BATCH, AdmissionGuard
+from repro.runtime.errors import (AdmissionError, DivergenceError,
+                                  KernelFailure, PoolOverflowError)
+from repro.runtime.failover import FailoverPolicy
+from repro.runtime.health import SessionHealth
 
 __all__ = [
     "compile", "CompiledProgram", "Session", "GraphSession", "bind_graph",
     "SessionResult", "PropertyView", "register_engine",
     "available_backends", "restore_session",
+    "AdmissionError", "PoolOverflowError", "KernelFailure",
+    "DivergenceError", "SessionHealth",
 ]
 
 _DEFAULT_CAPACITY = 64
@@ -76,12 +85,61 @@ def compile(source_or_path: str) -> "CompiledProgram":
     return _compile_cached(s, stamp)
 
 
+def _make_engine_failover(backend: str, failover, **backend_opts):
+    """Instantiate ``backend``; with failover enabled, a factory that
+    raises (missing accelerator, import error) falls down the chain at
+    bind time.  Returns ``(engine, bound_registry_name)``."""
+    if not failover:
+        return make_engine(backend, **backend_opts), backend
+    chain = failover_chain(backend) if failover is True else tuple(failover)
+    last = None
+    for name in (backend, *chain):
+        try:
+            # backend_opts are engine-specific (e.g. pallas k=): only
+            # the requested backend gets them
+            opts = backend_opts if name == backend else {}
+            return make_engine(name, **opts), name
+        except Exception as e:       # noqa: BLE001 — bind-time failover
+            last = e
+    raise KernelFailure(
+        f"no backend in {(backend, *chain)} could be constructed",
+        backend=backend, cause=last)
+
+
+def _post_bind_failover(sess: "GraphSession", requested: str, bound: str,
+                        failover) -> None:
+    """Record a bind-time degradation (the requested backend's factory
+    failed and a fallback was bound instead)."""
+    if bound == requested or not failover:
+        return
+    chain = failover_chain(requested) if failover is True else tuple(failover)
+    sess._failover = FailoverPolicy(requested, chain)
+    sess._failover.degraded_from()
+    sess._health.preferred_backend = requested
+    sess._health.backend = bound
+    sess._health.failovers += 1
+
+
 def bind_graph(csr: CSR, backend: str = "jnp",
                capacity: Union[str, int] = "auto",
+               admission: Optional[str] = "clamp",
+               max_batch: int = DEFAULT_MAX_BATCH,
+               dead_letter: int = 64,
+               failover=None,
                **backend_opts) -> "GraphSession":
     """An algorithm-agnostic session (no DSL program): a device-resident
-    graph handle for hand-staged ``repro.algos`` code."""
-    return GraphSession(make_engine(backend, **backend_opts), csr, capacity)
+    graph handle for hand-staged ``repro.algos`` code.
+
+    ``admission`` / ``max_batch`` / ``dead_letter`` configure the ΔG
+    admission guard (policy ``reject | clamp | quarantine | off``;
+    DESIGN.md §6); ``failover=True`` (or an explicit chain of registry
+    names) arms graceful backend degradation."""
+    engine, bound = _make_engine_failover(backend, failover, **backend_opts)
+    sess = GraphSession(engine, csr, capacity, backend_name=bound,
+                        admission=admission, max_batch=max_batch,
+                        dead_letter=dead_letter, failover=failover)
+    _post_bind_failover(sess, backend, bound, failover)
+    return sess
 
 
 def _auto_capacity(stream: Optional[UpdateStream] = None,
@@ -194,8 +252,18 @@ class GraphSession:
     stream executor all route through here and keep the handle warm.
     """
 
+    # grow-and-replay attempts before _retry_on_overflow gives up with
+    # PoolOverflowError (capacity doubles each attempt, so 8 attempts =
+    # 256x the starting pool — past that the batch is hostile, not big)
+    _max_grow_attempts = 8
+
     def __init__(self, engine: Engine, csr: CSR,
-                 capacity: Union[str, int] = "auto"):
+                 capacity: Union[str, int] = "auto", *,
+                 backend_name: Optional[str] = None,
+                 admission: Optional[str] = "clamp",
+                 max_batch: int = DEFAULT_MAX_BATCH,
+                 dead_letter: int = 64,
+                 failover=None):
         if not (capacity == "auto" or isinstance(capacity, int)):
             raise ValueError(f"capacity must be 'auto' or an int, "
                              f"got {capacity!r}")
@@ -209,6 +277,24 @@ class GraphSession:
         # ΔG batches applied through apply()/run_stream() — the resume
         # position checkpointed by save()
         self._cursor = 0
+        # -- fault runtime (DESIGN.md §6) ----------------------------------
+        # engines share Engine.name across registry entries (pallas and
+        # pallas_chained are both "pallas"), so the session keeps the
+        # registry name it was bound under — the failover chain keys on it
+        self._backend_name = backend_name or engine.name
+        self._health = SessionHealth(backend=self._backend_name,
+                                     preferred_backend=self._backend_name)
+        self._guard = AdmissionGuard(admission, max_batch=max_batch,
+                                     dead_letter=dead_letter,
+                                     health=self._health)
+        self._health.dead_letter = self._guard.buffer
+        if failover:
+            chain = failover_chain(self._backend_name) if failover is True \
+                else tuple(failover)
+            self._failover: Optional[FailoverPolicy] = FailoverPolicy(
+                self._backend_name, chain)
+        else:
+            self._failover = None
 
     # -- resident state ------------------------------------------------------
     @property
@@ -218,6 +304,26 @@ class GraphSession:
     @property
     def backend(self) -> str:
         return self._engine.name
+
+    @property
+    def backend_name(self) -> str:
+        """The registry name this session is currently bound under
+        (distinct from ``backend``/``Engine.name``: pallas_chained
+        binds a PallasEngine whose ``name`` is also "pallas")."""
+        return self._backend_name
+
+    @property
+    def health(self) -> SessionHealth:
+        """Live fault-runtime counters (admission, overflow retries,
+        failovers, watchdog probes) — ``health.as_dict()`` is the
+        JSON-able snapshot a serving layer scrapes."""
+        self._health.backend = self._backend_name
+        return self._health
+
+    @property
+    def dead_letter(self):
+        """Quarantined-batch records (bounded; oldest evicted first)."""
+        return self._guard.buffer.records()
 
     @property
     def handle(self):
@@ -247,44 +353,213 @@ class GraphSession:
 
     def _sync_counters(self) -> tuple:
         """ONE host readback of the (overflow, used, dead) pool triple."""
+        _faults.fire("counter_sync", engine=self._backend_name)
         return tuple(int(x) for x in
                      np.asarray(self._engine.handle_counters(self._handle)))
 
+    def _n_vertices(self) -> int:
+        """Real vertex count, available before AND after prepare (a
+        restored session has a handle but no CSR)."""
+        return self._engine.n_real if self._handle is not None \
+            else self._csr.n
+
     def _retry_on_overflow(self, attempt: Callable[[], None],
-                           regrow: Callable[[], None]) -> None:
+                           regrow: Callable[[], None],
+                           batch=None,
+                           rollback: Optional[Callable[[], None]] = None
+                           ) -> None:
         """The one grow-on-overflow backstop: run ``attempt()`` (which
         mutates session state); while it raised the overflow counter,
-        ``regrow()`` (roll back + grow the pool) and replay.
+        ``regrow()`` (roll back + grow the pool) and replay — **bounded**
+        to ``_max_grow_attempts`` grows, after which ``rollback()``
+        restores the pre-batch state and :class:`PoolOverflowError`
+        carries the offending batch + pool stats out (growing until OOM
+        is how a hostile batch used to take the whole process down).
+        ``rollback()`` also runs if an attempt raises (an injected
+        kernel fault mid-batch must not leave half-applied state).
 
         Exactly one counter sync per attempt: the triple is read once
         *post*-attempt and compared against the running ``_of_base``
         (the pre+post pair this replaces reintroduced the per-batch host
         sync PR 6's debt #4 removed from ``run_stream``)."""
-        attempt()
+        def run_attempt():
+            try:
+                attempt()
+            except BaseException:
+                if rollback is not None:
+                    rollback()
+                raise
+
+        run_attempt()
         of = self._sync_counters()[0]
+        grows = 0
         while of > self._of_base:
+            self._health.overflow_retries += 1
+            if grows >= self._max_grow_attempts:
+                if rollback is not None:
+                    rollback()
+                counters = self._sync_counters()
+                cap = self._engine._diff_capacity(self._handle)
+                err = PoolOverflowError(
+                    f"batch still overflows the diff pool after "
+                    f"{grows} grow-and-replay attempts "
+                    f"(capacity now {cap}); state rolled back to the "
+                    f"pre-batch graph", batch=batch, attempts=grows,
+                    diff_capacity=cap, counters=counters)
+                self._health.record_error(err)
+                raise err
             regrow()
+            grows += 1
+            self._health.pool_grows += 1
             self._of_base = 0  # grow merges the pool, clearing counters
-            attempt()
+            run_attempt()
             of = self._sync_counters()[0]
         self._of_base = of
 
+    # -- graceful backend degradation (DESIGN.md §6) -------------------------
+    def _guarded(self, op: Callable[[], Any]):
+        """Run ``op`` with backend failover: a kernel/compile failure
+        hops down the failover chain (migrating device state through
+        ``state_to_csr``) and replays ``op`` on the survivor.  The typed
+        data-plane faults (admission, pool overflow, divergence) pass
+        through — they are the stream's fault, not the backend's.  ``op``
+        must read ``self._engine`` / ``self._handle`` fresh so a replay
+        sees the migrated state."""
+        if self._failover is None:
+            try:
+                return op()
+            except (AdmissionError, PoolOverflowError, DivergenceError):
+                raise
+            except Exception as exc:   # noqa: BLE001 — health bookkeeping
+                self._health.kernel_failures += 1
+                self._health.record_error(exc)
+                raise
+        self._maybe_reprobe()
+        try:
+            return op()
+        except (AdmissionError, PoolOverflowError, DivergenceError):
+            raise
+        except Exception as exc:       # noqa: BLE001 — failover boundary
+            return self._degrade_and_retry(op, exc)
+
+    def _degrade_and_retry(self, op: Callable[[], Any], exc: Exception):
+        self._health.kernel_failures += 1
+        self._health.record_error(exc)
+        last = exc
+        for name in self._failover.candidates(self._backend_name):
+            try:
+                self._migrate(name)
+            except Exception as mexc:  # noqa: BLE001 — try next in chain
+                last = mexc
+                continue
+            self._failover.degraded_from()
+            self._health.failovers += 1
+            try:
+                return op()
+            except (AdmissionError, PoolOverflowError, DivergenceError):
+                raise
+            except Exception as nexc:  # noqa: BLE001 — keep degrading
+                self._health.kernel_failures += 1
+                self._health.record_error(nexc)
+                last = nexc
+        err = KernelFailure(
+            f"backend {self._failover.preferred!r} and its failover "
+            f"chain {tuple(self._failover.chain)} all failed",
+            backend=self._backend_name, cause=last)
+        self._health.record_error(err)
+        raise err
+
+    def _maybe_reprobe(self) -> None:
+        """Sticky degradation with periodic re-probe: once the backoff
+        window since the last failure elapses, try converting back to
+        the preferred backend; a failed probe doubles the window."""
+        if (self._backend_name == self._failover.preferred
+                or not self._failover.should_probe()):
+            return
+        self._health.reprobes += 1
+        try:
+            self._migrate(self._failover.preferred)
+        except Exception as exc:       # noqa: BLE001 — probe failed
+            self._failover.probe_failed()
+            self._health.record_error(exc)
+        else:
+            self._failover.recovered()
+
+    def _migrate(self, name: str) -> None:
+        """Re-bind this session's device state onto backend ``name``
+        through the cross-backend conversion path (PR 7):
+        ``pack_state`` (pure data access — works even when the source
+        backend's kernels are broken) → host → ``state_to_csr`` →
+        ``prepare`` on the new engine, properties re-placed per the new
+        engine's padding.  Value-preserving; pool layout resets."""
+        self._ensure_prepared()
+        old = self._engine
+        n = old.n_real
+        tree, hmeta = old.pack_state(self._handle)
+        tree = jax.tree_util.tree_map(np.asarray, tree)
+        props = {k: np.asarray(v)[:n] for k, v in self._props.items()}
+        csr, cap = state_to_csr(tree, hmeta)
+        engine = make_engine(name)
+        handle = engine.prepare(csr, diff_capacity=cap)
+        self._engine = engine
+        self._handle = handle
+        self._backend_name = name
+        self._health.backend = name
+        self._props = {k: engine.put_vertex_array(
+            _fit_pad(v, n, engine.n_pad)) for k, v in props.items()}
+        self._of_base = self._sync_counters()[0]
+
+    # -- divergence watchdog -------------------------------------------------
+    def _watch(self, arrays: Dict[str, Any], where: str) -> None:
+        if self._guard.policy != "off":
+            _watchdog.check(arrays.items(), where=where,
+                            health=self._health)
+
+    def check_divergence(self) -> None:
+        """On-demand NaN/Inf probe over the resident property arrays;
+        raises :class:`DivergenceError` naming the poisoned ones."""
+        _watchdog.check(self._props.items(), where="check_divergence",
+                        health=self._health)
+
     # -- structural updates --------------------------------------------------
     def apply(self, batch: UpdateBatch) -> "GraphSession":
-        """Apply one ΔG batch structurally (deletes then adds), growing
+        """Apply one ΔG batch structurally (deletes then adds), after
+        admission (reject/clamp/quarantine — see ``bind_graph``), growing
         the diff pool and replaying on overflow."""
         self._ensure_prepared(batch=batch)
-        base = self._handle
+        admitted = self._guard.admit(batch, self._n_vertices(),
+                                     cursor=self._cursor)
+        if admitted is None:           # quarantined: consumed, not applied
+            self._cursor += 1
+            return self
+        if self._guard.policy != "off" and not (
+                np.asarray(admitted.add_mask).any()
+                or np.asarray(admitted.del_mask).any()):
+            # zero active lanes: a masked-out scatter is a device no-op,
+            # so skip the launch entirely (structural path only — the
+            # armed path runs every batch body for one-shot bit-equality)
+            self._health.empty_skipped += 1
+            self._cursor += 1
+            return self
 
-        def attempt():
-            h = self._engine.update_del(base, batch)
-            self._handle = self._engine.update_add(h, batch)
+        def work():
+            base = self._handle
 
-        def regrow():
-            nonlocal base
-            base = self._handle = self._engine.grow(base)
+            def attempt():
+                h = self._engine.update_del(base, admitted)
+                self._handle = self._engine.update_add(h, admitted)
 
-        self._retry_on_overflow(attempt, regrow)
+            def regrow():
+                nonlocal base
+                base = self._handle = self._engine.grow(base)
+
+            def rollback():
+                self._handle = base
+
+            self._retry_on_overflow(attempt, regrow, batch=admitted,
+                                    rollback=rollback)
+
+        self._guarded(work)
         self._cursor += 1
         return self
 
@@ -296,44 +571,143 @@ class GraphSession:
         type — is adopted into the session; anything else passes
         through untouched."""
         self._ensure_prepared()
-        base = self._handle
         ret = {}
 
-        def attempt():
-            self._handle = base
-            out = fn(self._engine, base, *args, **kwargs)
-            if isinstance(out, tuple) and len(out) == 2 and \
-                    type(out[0]) is type(base):
-                self._handle, result = out
-                if isinstance(result, dict):
-                    self._props = dict(result)
-                ret["value"] = result
-            else:
-                ret["value"] = out
+        def work():
+            base = self._handle
 
-        def regrow():
-            # the driver overflowed the pool: grow it and re-run the
-            # driver from the grown pre-call graph
-            nonlocal base
-            base = self._engine.grow(base)
+            def attempt():
+                self._handle = base
+                out = fn(self._engine, base, *args, **kwargs)
+                if isinstance(out, tuple) and len(out) == 2 and \
+                        type(out[0]) is type(base):
+                    self._handle, result = out
+                    if isinstance(result, dict):
+                        self._props = dict(result)
+                    ret["value"] = result
+                else:
+                    ret["value"] = out
 
-        self._retry_on_overflow(attempt, regrow)
+            def regrow():
+                # the driver overflowed the pool: grow it and re-run the
+                # driver from the grown pre-call graph
+                nonlocal base
+                base = self._engine.grow(base)
+
+            def rollback():
+                self._handle = base
+
+            self._retry_on_overflow(attempt, regrow, rollback=rollback)
+
+        self._guarded(work)
         return ret["value"]
 
     def run_stream(self, stream: UpdateStream, batch_size: int,
                    step_fn: Callable, carry, **kw):
         """Drive a stream through the engine's fused executor
         (``Engine.run_stream``); the updated handle stays resident and
-        the final carry is returned."""
+        the final carry is returned.
+
+        Admission runs as ONE vectorized host pass over the raw stream
+        arrays before any device work — a clean stream (the common case)
+        then takes the fused path untouched.  Poison batches are spliced
+        out per policy and the surviving contiguous ranges still run
+        fused (``UpdateStream.window`` keeps batch boundaries
+        lane-identical)."""
         self._ensure_prepared(stream=stream)
-        self._handle, carry = self._engine.run_stream(
-            self._handle, stream, batch_size, step_fn, carry, **kw)
-        # the fused executor may have grown/merged internally — resync
-        # the overflow base with one triple read
-        self._of_base = self._sync_counters()[0]
-        self._cursor += stream.num_batches(batch_size)
+        nb = stream.num_batches(batch_size)
+        poison = self._guard.inspect_stream(stream, batch_size,
+                                            self._n_vertices())
+        if poison:
+            carry = self._run_stream_guarded(stream, batch_size, step_fn,
+                                             carry, poison, **kw)
+        else:
+            if self._guard.policy != "off":
+                self._health.admitted += nb
+
+            def op(c=carry):
+                return self._engine.run_stream(self._handle, stream,
+                                               batch_size, step_fn, c,
+                                               **kw)
+
+            self._handle, carry = self._guarded(op)
+            # the fused executor may have grown/merged internally —
+            # resync the overflow base with one triple read
+            self._of_base = self._sync_counters()[0]
+            self._cursor += nb
         if isinstance(carry, dict):
             self._props = dict(carry)
+            self._watch(carry, where="run_stream")
+        return carry
+
+    def _apply_step(self, batch: UpdateBatch, step_fn: Callable, carry,
+                    **kw):
+        """One per-batch stream step (the poison-splice path): the
+        baseline executor's body for a single admitted batch, with the
+        bounded grow-and-replay backstop."""
+        out = {}
+
+        def attempt():
+            view = self._engine.stream_view()
+            h, c = step_fn(view, base[0], batch, carry)
+            self._handle = h
+            out["carry"] = c
+
+        base = [self._handle]
+
+        def regrow():
+            base[0] = self._handle = self._engine.grow(base[0])
+
+        def rollback():
+            self._handle = base[0]
+
+        self._retry_on_overflow(attempt, regrow, batch=batch,
+                                rollback=rollback)
+        return out["carry"]
+
+    def _run_stream_guarded(self, stream: UpdateStream, batch_size: int,
+                            step_fn: Callable, carry, poison, **kw):
+        """Poison batches present: under ``reject`` fail fast before any
+        device work; otherwise walk the stream, running clean contiguous
+        ranges through the fused executor and resolving each poison
+        batch individually (clamp → sanitize + single step; quarantine →
+        dead-letter + skip, cursor still advancing — the batch was
+        *consumed*, keeping durable-resume alignment)."""
+        n = self._n_vertices()
+        nb = stream.num_batches(batch_size)
+        if self._guard.policy == "reject":
+            first = min(poison)
+            self._guard.resolve(stream.batch(first, batch_size),
+                                poison[first], self._cursor, first, n)
+            raise AssertionError("reject policy must raise")   # pragma: no cover
+        i = 0
+        while i < nb:
+            if i in poison:
+                admitted = self._guard.resolve(
+                    stream.batch(i, batch_size), poison[i],
+                    self._cursor, i, n)
+                if admitted is not None:
+                    carry = self._guarded(
+                        lambda b=admitted, c=carry:
+                        self._apply_step(b, step_fn, c, **kw))
+                self._cursor += 1
+                i += 1
+            else:
+                j = i
+                while j < nb and j not in poison:
+                    j += 1
+                sub = stream.window(batch_size, i, j - i)
+                self._health.admitted += j - i
+
+                def op(s=sub, c=carry):
+                    return self._engine.run_stream(self._handle, s,
+                                                   batch_size, step_fn,
+                                                   c, **kw)
+
+                self._handle, carry = self._guarded(op)
+                self._cursor += j - i
+                i = j
+        self._of_base = self._sync_counters()[0]
         return carry
 
     def to_host(self) -> Dict[str, np.ndarray]:
@@ -398,8 +772,8 @@ class Session(GraphSession):
     """
 
     def __init__(self, compiled: "CompiledProgram", engine: Engine,
-                 csr: CSR, capacity: Union[str, int] = "auto"):
-        super().__init__(engine, csr, capacity)
+                 csr: CSR, capacity: Union[str, int] = "auto", **runtime_kw):
+        super().__init__(engine, csr, capacity, **runtime_kw)
         self.compiled = compiled
         self._armed: Optional[ArmedRun] = None
         # binding caches the staged per-(func, engine) executables, so
@@ -407,6 +781,30 @@ class Session(GraphSession):
         self._staged_funcs: Dict[str, Any] = {}
 
     # -- DSL execution -------------------------------------------------------
+    def _staged(self, func: str):
+        """The staged executable for ``func`` on the CURRENT engine
+        (failover migration clears the cache, so always resolve late)."""
+        st = self._staged_funcs.get(func)
+        if st is None:
+            st = self._staged_funcs[func] = \
+                self.compiled.program.stage(func, self._engine)
+        return st
+
+    def _batch_size_hint(self, staged, args) -> Optional[int]:
+        """The batch size a one-shot run will use, when statically
+        determinable host-side: Batch statements name their size
+        (usually a scalar param like ``batchSize``), so the caller's
+        args resolve it before execution.  None = undeterminable (the
+        admission guard then admits the one-shot path unchecked)."""
+        sizes = set()
+        for name in staged._armable:
+            v = args.get(name) if isinstance(name, str) else name
+            if isinstance(v, bool):
+                continue
+            if isinstance(v, (int, np.integer)):
+                sizes.add(int(v))
+        return sizes.pop() if len(sizes) == 1 else None
+
     def run(self, func: str, **args) -> SessionResult:
         """Execute DSL function ``func`` against the resident graph.
 
@@ -420,38 +818,88 @@ class Session(GraphSession):
                       if p.type.name == "updates"]
         streams = [args[p] for p in upd_params
                    if args.get(p) is not None]
-        staged = self._staged_funcs.get(func)
-        if staged is None:
-            staged = self._staged_funcs[func] = program.stage(func,
-                                                              self._engine)
+        staged = self._staged(func)
         self._ensure_prepared(stream=streams[0] if streams else None)
 
         if upd_params and not streams:
-            self._armed = staged.begin(self._handle, args)
-            self._handle = self._armed.gbox.value
-            self._props = self._armed.device_props()
+            def arm():
+                armed = self._staged(func).begin(self._handle, args)
+                self._armed = armed
+                self._handle = armed.gbox.value
+                self._props = armed.device_props()
+
+            self._guarded(arm)
             return SessionResult(self, self.props, value=None)
 
-        base = self._handle
+        if streams and self._guard.policy != "off":
+            res = self._run_oneshot_guarded(func, staged, args, upd_params)
+            if res is not None:
+                return res
+
         out = {}
 
-        def attempt():
-            g, props, ret = staged.call(base, args)
-            self._handle = g
-            out["props"], out["ret"] = props, ret
+        def op():
+            st = self._staged(func)
+            base = self._handle
 
-        def regrow():
-            # adds were dropped: grow the pool and replay the whole run
-            # from the pre-run graph (same backstop as apply/run_stream)
-            nonlocal base
-            base = self._engine.grow(base)
+            def attempt():
+                g, props, ret = st.call(base, args)
+                self._handle = g
+                out["props"], out["ret"] = props, ret
 
-        self._retry_on_overflow(attempt, regrow)
+            def regrow():
+                # adds were dropped: grow the pool and replay the whole
+                # run from the pre-run graph (same backstop as
+                # apply/run_stream)
+                nonlocal base
+                base = self._engine.grow(base)
+
+            def rollback():
+                self._handle = base
+
+            self._retry_on_overflow(attempt, regrow, rollback=rollback)
+
+        self._guarded(op)
         # disarm only now: a run that raised (bad args, lowering error)
         # must leave a previously armed loop intact
         self._armed = None
         self._props = out["props"]
+        self._watch(self._props, where=f"run({func})")
         return SessionResult(self, self.props, value=out["ret"])
+
+    def _run_oneshot_guarded(self, func: str, staged, args,
+                             upd_params) -> Optional[SessionResult]:
+        """Admission for one-shot runs: inspect the stream host-side
+        before execution.  A clean stream returns None — the caller
+        takes the normal one-shot path bit-exactly.  With poison
+        batches, ``reject`` raises; clamp/quarantine fall back to
+        arming the Batch loop and feeding guarded per-batch applies
+        (documented bit-identical to one-shot over the same batches)."""
+        if len(upd_params) != 1:
+            return None
+        pname = upd_params[0]
+        stream = args[pname]
+        bs = self._batch_size_hint(staged, args)
+        if bs is None or not isinstance(stream, UpdateStream):
+            return None
+        poison = self._guard.inspect_stream(stream, bs, self._n_vertices())
+        if not poison:
+            self._health.admitted += stream.num_batches(bs)
+            return None
+        arm_args = {k: v for k, v in args.items() if k != pname}
+
+        def arm():
+            armed = self._staged(func).begin(self._handle, arm_args)
+            self._armed = armed
+            self._handle = armed.gbox.value
+            self._props = armed.device_props()
+
+        self._guarded(arm)
+        self._armed_stream_loop(stream, bs)
+        value = self._armed.value()
+        self._armed = None
+        self._watch(self._props, where=f"run({func})")
+        return SessionResult(self, self.props, value=value)
 
     @property
     def armed(self) -> bool:
@@ -487,24 +935,113 @@ class Session(GraphSession):
             return self
         if self._armed.returned:
             return self    # a batch body returned: the Batch loop is
-        armed = self._armed    # over, exactly as in a one-shot run
-        snap = armed.snapshot()
-
-        def attempt():
-            armed.apply(batch)
-            self._handle = armed.gbox.value
-
-        def regrow():
-            nonlocal snap
-            armed.restore(snap)
-            armed.gbox.value = self._engine.grow(armed.gbox.value)
-            self._handle = armed.gbox.value
-            snap = armed.snapshot()
-
-        self._retry_on_overflow(attempt, regrow)
-        self._props = armed.device_props()
-        self._cursor += 1
+                           # over, exactly as in a one-shot run
+        admitted = self._guard.admit(batch, self._n_vertices(),
+                                     cursor=self._cursor)
+        if admitted is None:          # quarantined: batch consumed
+            self._cursor += 1
+            return self
+        self._apply_armed(admitted)
         return self
+
+    def _apply_armed(self, batch: UpdateBatch) -> None:
+        """One already-admitted batch through the armed loop body, with
+        snapshot rollback (overflow regrow-and-replay, and clean state
+        for failover's migrate-and-replay on kernel failure)."""
+
+        def op():
+            armed = self._armed   # re-read: migration re-arms
+            snap = [armed.snapshot()]
+
+            def attempt():
+                armed.apply(batch)
+                self._handle = armed.gbox.value
+
+            def regrow():
+                armed.restore(snap[0])
+                armed.gbox.value = self._engine.grow(armed.gbox.value)
+                self._handle = armed.gbox.value
+                snap[0] = armed.snapshot()
+
+            def rollback():
+                armed.restore(snap[0])
+                self._handle = armed.gbox.value
+
+            self._retry_on_overflow(attempt, regrow, batch=batch,
+                                    rollback=rollback)
+
+        self._guarded(op)
+        self._props = self._armed.device_props()
+        self._cursor += 1
+
+    def _armed_stream_loop(self, stream: UpdateStream, bs: int) -> None:
+        """Fold a stream through the armed loop with STREAM-level
+        admission.  Batch-level inspection cannot see every violation —
+        ``UpdateStream.batch()`` int-casts NaN weights and clamps them
+        to >= 1 while padding — so poison batches are located on the raw
+        host rows first and resolved per policy as the loop reaches
+        them."""
+        n = self._n_vertices()
+        poison = self._guard.inspect_stream(stream, bs, n)
+        if poison and self._guard.policy == "reject":
+            first = min(poison)
+            self._guard.resolve(stream.batch(first, bs), poison[first],
+                                self._cursor, first, n)
+            raise AssertionError("reject policy must raise")  # pragma: no cover
+        for i in range(stream.num_batches(bs)):
+            if self._armed.returned:
+                break            # a batch body returned: stop, like the
+            batch = stream.batch(i, bs)   # one-shot Batch loop does
+            if i in poison:
+                batch = self._guard.resolve(batch, poison[i],
+                                            self._cursor, i, n)
+                if batch is None:         # quarantined: batch consumed
+                    self._cursor += 1
+                    continue
+            elif self._guard.policy != "off":
+                self._health.admitted += 1
+            self._apply_armed(batch)
+
+    # -- failover ------------------------------------------------------------
+    def _migrate(self, name: str) -> None:
+        """Backend migration with the armed Batch loop carried across:
+        the paused frame is serialized on the failing backend (pure data
+        access — works even when its kernels don't), the graph state is
+        converted through the canonical alive-edge list, and the frame
+        is re-staged and deserialized on the survivor."""
+        armed_state = None
+        if self._armed is not None:
+            arrays, armed_meta = self._armed.serialize()
+            for pname, m in armed_meta["env"].items():
+                if m["kind"] == "prop" and m.get("bound") and m["is_edge"]:
+                    raise KernelFailure(
+                        f"cannot fail over to {name!r}: armed edge "
+                        f"property {pname!r} is bound to the "
+                        f"{self._backend_name!r} pool layout",
+                        backend=name)
+            armed_state = ({k: np.asarray(v) for k, v in arrays.items()},
+                           armed_meta)
+        n = self._engine.n_real
+        super()._migrate(name)
+        # staged executables embed the old engine's jitted closures
+        self._staged_funcs.clear()
+        if armed_state is not None:
+            self._rearm(armed_state[1], armed_state[0], n)
+
+    def _rearm(self, armed_meta: dict, arrays: dict, n: int) -> None:
+        """Re-stage an armed Batch loop on the CURRENT engine and
+        rebuild its paused frame from serialized arrays (shared by
+        failover migration and ``restore_session``)."""
+        for pname, m in armed_meta["env"].items():
+            if m["kind"] == "prop" and m.get("bound") and not m["is_edge"]:
+                arrays[f"prop_{pname}"] = self._engine.put_vertex_array(
+                    _fit_pad(arrays[f"prop_{pname}"], n,
+                             self._engine.n_pad))
+        staged = self._staged(armed_meta["func"])
+        self._armed = ArmedRun.deserialize(staged, self._handle, arrays,
+                                           armed_meta)
+        self._handle = self._armed.gbox.value
+        self._props = self._armed.device_props()
 
     # -- durability ----------------------------------------------------------
     def state_tree(self):
@@ -557,10 +1094,8 @@ class Session(GraphSession):
             raise CodegenError("no batch size: pass run_stream(..., "
                                "batch_size=N) or batchSize= at arm time")
         self._ensure_prepared(stream=stream)
-        for batch in stream.batches(int(bs)):
-            if self._armed.returned:
-                break            # a batch body returned: stop, like the
-            self.apply(batch)    # one-shot Batch loop does
+        self._armed_stream_loop(stream, int(bs))
+        self._watch(self._props, where="run_stream(armed)")
         return SessionResult(self, self.props, value=self._armed.value())
 
 
@@ -578,15 +1113,36 @@ class CompiledProgram:
 
     def bind(self, csr: CSR, backend: str = "jnp",
              capacity: Union[str, int] = "auto",
+             admission: str = "clamp",
+             max_batch: int = DEFAULT_MAX_BATCH,
+             dead_letter: int = 64,
+             failover=None,
              **backend_opts) -> Session:
         """Bind to a graph on a named backend.  ``capacity`` sizes the
         diff-CSR pool: an int is explicit; ``"auto"`` derives it from
         the stream of the first one-shot run (armed sessions prepare
         for the prologue before any update exists, so they start at the
         default size), with grow-on-overflow as the backstop either
-        way."""
-        return Session(self, make_engine(backend, **backend_opts), csr,
-                       capacity)
+        way.
+
+        Runtime knobs mirror :func:`bind_graph`: ``admission`` is the
+        ΔG validation policy (``reject | clamp | quarantine | off``),
+        ``failover=True`` enables the registry's degradation chain for
+        ``backend`` (or pass an explicit tuple of fallback names) —
+        including at bind time: if the preferred backend fails to
+        construct, the session comes up degraded on the first survivor
+        and re-probes the preferred backend on a backoff timer."""
+        if failover:
+            engine, bound = _make_engine_failover(backend, failover,
+                                                  **backend_opts)
+        else:
+            engine, bound = make_engine(backend, **backend_opts), backend
+        sess = Session(self, engine, csr, capacity,
+                       backend_name=bound, admission=admission,
+                       max_batch=max_batch, dead_letter=dead_letter,
+                       failover=failover)
+        _post_bind_failover(sess, backend, bound, failover)
+        return sess
 
     def __repr__(self):
         return f"CompiledProgram(functions={self.functions})"
@@ -655,25 +1211,15 @@ def restore_session(ckpt_dir, backend: Optional[str] = None,
     if armed_meta is not None:
         arrays = dict(tree.get("armed") or {})
         for name, m in armed_meta["env"].items():
-            if m["kind"] == "prop" and m.get("bound"):
-                if m["is_edge"] and not lanes_ok:
-                    raise ValueError(
-                        f"armed edge property {name!r} is bound to the "
-                        f"saved pool layout; it cannot survive a "
-                        f"cross-backend restore or a dist re-mesh — "
-                        f"restore onto the saving backend, or disarm "
-                        f"before saving")
-                if not m["is_edge"]:
-                    arrays[f"prop_{name}"] = engine.put_vertex_array(
-                        _fit_pad(arrays[f"prop_{name}"], n, engine.n_pad))
-        staged = sess._staged_funcs.get(armed_meta["func"])
-        if staged is None:
-            staged = sess._staged_funcs[armed_meta["func"]] = \
-                sess.compiled.program.stage(armed_meta["func"], engine)
-        sess._armed = ArmedRun.deserialize(staged, handle, arrays,
-                                           armed_meta)
-        sess._handle = sess._armed.gbox.value
-        sess._props = sess._armed.device_props()
+            if m["kind"] == "prop" and m.get("bound") and m["is_edge"] \
+                    and not lanes_ok:
+                raise ValueError(
+                    f"armed edge property {name!r} is bound to the "
+                    f"saved pool layout; it cannot survive a "
+                    f"cross-backend restore or a dist re-mesh — "
+                    f"restore onto the saving backend, or disarm "
+                    f"before saving")
+        sess._rearm(armed_meta, arrays, n)
     # one triple read pins the overflow base for the restored pool
     sess._of_base = sess._sync_counters()[0]
     return sess

@@ -32,11 +32,16 @@ import jax
 # Test seam for the crash-injection suite (tests/test_ckpt_protocol.py):
 # when set, it is called with a named commit-protocol point ("shard",
 # "manifest", "committed", "renamed") and may raise to simulate a kill
-# at exactly that boundary.  None in production.
+# at exactly that boundary.  None in production.  The same points also
+# cross the chaos harness's "checkpoint_write" seam
+# (repro.runtime.faults), which generalizes this hook; _crash_point is
+# kept for the PR 7 protocol tests.
 _crash_point: Optional[Callable[[str], None]] = None
 
 
 def _maybe_crash(point: str) -> None:
+    from repro.runtime import faults as _faults
+    _faults.fire("checkpoint_write", point=point)
     if _crash_point is not None:
         _crash_point(point)
 
@@ -132,7 +137,15 @@ def read_manifest(ckpt_dir, step: int) -> dict:
     if not (d / "COMMITTED").exists():
         raise FileNotFoundError(f"step {step} in {ckpt_dir} is not a "
                                 f"committed checkpoint")
-    return json.loads((d / "manifest.json").read_text())
+    try:
+        return json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        # committed marker present but payload unreadable: the commit
+        # protocol's invariant was violated after the marker
+        from repro.runtime.errors import CheckpointCorrupt
+        raise CheckpointCorrupt(
+            f"committed step {step} has an unreadable manifest: {e}",
+            path=d, step=step) from e
 
 
 def restore(ckpt_dir, step: int, example_tree: Any,
@@ -140,17 +153,36 @@ def restore(ckpt_dir, step: int, example_tree: Any,
     """Restore into the *structure and shardings* of example_tree — the
     elastic-rescale path: leaves are re-device_put with whatever sharding
     the (possibly different-sized) current mesh dictates."""
+    from repro.runtime.errors import CheckpointCorrupt
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(
+            f"step {step} has an unreadable manifest: {e}",
+            path=d, step=step) from e
     leaves, treedef = _flatten(example_tree)
-    assert manifest["n_leaves"] == len(leaves), \
-        f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"
+    if manifest["n_leaves"] != len(leaves):
+        raise CheckpointCorrupt(
+            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"restore tree has {len(leaves)}", path=d, step=step)
     new = []
+    try:
+        shard = np.load(d / f"shard_{host_id}.npz")
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(
+            f"step {step} shard {host_id} is unreadable: {e}",
+            path=d, step=step) from e
     # context-manage the NpzFile: a leaked zip fd per restore starves a
     # long-lived session pool of descriptors
-    with np.load(d / f"shard_{host_id}.npz") as data:
+    with shard as data:
         for i, ex in enumerate(leaves):
-            arr = data[f"leaf_{i}"]
+            try:
+                arr = data[f"leaf_{i}"]
+            except KeyError as e:
+                raise CheckpointCorrupt(
+                    f"step {step} shard {host_id} is missing leaf_{i}",
+                    path=d, step=step) from e
             if hasattr(ex, "sharding") and ex.sharding is not None:
                 try:
                     new.append(jax.device_put(arr.astype(ex.dtype),

@@ -368,6 +368,9 @@ class DistEngine(Engine):
         return jnp.stack([jnp.sum(dg.overflow), used, dead])
 
     def grow(self, dg: DistGraph, factor: float = 2.0) -> DistGraph:
+        from repro.runtime import faults as _faults
+        _faults.fire("pool_merge", engine=self.name,
+                     diff_capacity=int(dg.d_src.shape[1]))
         self._evict_stream_cache(self._handle_shape_key(dg))
         cap = dg.d_src.shape[1]
         return self.merge(dg, diff_capacity=max(int(cap * factor), cap + 16))

@@ -27,6 +27,7 @@ from repro.graph.csr import CSR, INT, INF_W, build_csr
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph, BOOL
 from repro.graph.updates import UpdateBatch
+from repro.runtime import faults as _faults
 
 Props = Dict[str, jax.Array]
 
@@ -275,6 +276,8 @@ class Engine:
             stacked = stream.stacked(batch_size, i, k)
             while True:
                 snap = (handle, carry)
+                _faults.fire("segment_scan", engine=self.name,
+                             start=i, count=k)
                 run = self._segment_runner(step_fn, handle, batch_size)
                 handle, carry, counters = run(handle, carry, stacked)
                 of, _used, dead = (int(x) for x in np.asarray(counters))
@@ -301,6 +304,7 @@ class Engine:
         for i in range(stream.num_batches(batch_size)):
             batch = stream.batch(i, batch_size)
             snap = (handle, carry)
+            _faults.fire("segment_scan", engine=self.name, start=i, count=1)
             handle, carry = step_fn(view, handle, batch, carry)
             # ONE counter sync per batch (and per replay): read the
             # (overflow, used, dead) triple once, branch on the host copy.
@@ -581,6 +585,8 @@ class JnpEngine(Engine):
         return self._max_deg("main", g.offsets), g.diff_capacity
 
     def grow(self, g: DynGraph, factor: float = 2.0) -> DynGraph:
+        _faults.fire("pool_merge", engine=self.name,
+                     diff_capacity=g.diff_capacity)
         # the old-capacity stream executables can never run again
         self._evict_stream_cache((g.main_capacity, g.diff_capacity))
         cap = max(int(g.diff_capacity * factor), g.diff_capacity + 16)

@@ -42,6 +42,7 @@ from repro.graph.csr import CSR, INT, INF_W
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph
 from repro.graph.updates import UpdateBatch
+from repro.runtime import faults as _faults
 from repro.kernels.ell import (Ell, ell_apply_add, ell_apply_del,
                                ell_state, ell_from_state)
 from repro.kernels.ell import pack_push_ell as _pack_push_ell_raw
@@ -272,6 +273,8 @@ class FrontierEngine(JnpEngine):
                 it += DENSE_CHUNK
             else:
                 cap = _next_pow2(max(f_rows, 1))
+                _faults.fire("kernel_launch", engine=self.name,
+                             op="sparse_step", cap=cap)
                 props = sparse_jitted(cap)(h, props, fmask)
                 it += 1
         return props

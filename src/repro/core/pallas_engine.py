@@ -47,6 +47,7 @@ from repro.kernels.ell import pack_ell as _pack_ell_raw
 pack_ell = jax.jit(_pack_ell_raw, static_argnums=(1, 2))
 from repro.kernels import ops as kops
 from repro.kernels import pallas_repair as FK
+from repro.runtime import faults as _faults
 
 
 @jax.tree_util.register_dataclass
@@ -134,6 +135,11 @@ class PallasEngine(JnpEngine):
         return PallasHandle(g=g, ell=ell)
 
     def update_add(self, h: PallasHandle, batch: UpdateBatch) -> PallasHandle:
+        # both regimes launch kernels here (fused: the merge-path pool
+        # fold; chained: the ELL pack update below), so the chaos seam
+        # sits above the branch — ctx carries `fused` for targeting
+        _faults.fire("kernel_launch", engine=self.name,
+                     fused=self.fused, op="update_add")
         if self.fused:
             # one merge-path launch folds the admitted batch into the
             # sorted diff pool (replaces two binary-search sweeps + four
@@ -186,6 +192,8 @@ class PallasEngine(JnpEngine):
             return super()._run_sweep(h, sw, props)
         if not self._kernel_compatible(sw):
             return super()._run_sweep(h.g, sw, props)
+        _faults.fire("kernel_launch", engine=self.name, fused=self.fused,
+                     op="sweep")
         if self.fused:
             return self._run_sweep_fused(h, sw, props)
         return self._run_sweep_chained(h, sw, props)

@@ -97,3 +97,25 @@ def make_engine(name: str, **options) -> Engine:
 def available_backends() -> List[str]:
     """Sorted names of every registered backend."""
     return sorted(set(_BUILTIN_PATHS) | set(_FACTORIES))
+
+
+# Degradation order per backend: where a session falls when its bound
+# backend's kernels fail to compile or launch.  Every chain bottoms out
+# at "jnp" — the pure-XLA reference engine with no custom kernels, the
+# backend the conformance matrix holds as oracle.  Keys are *registry
+# names*, not Engine.name (pallas and pallas_chained share
+# Engine.name == "pallas"; the registry name is what bind() stores).
+DEFAULT_CHAIN: Dict[str, tuple] = {
+    "pallas": ("pallas_chained", "jnp"),
+    "pallas_chained": ("jnp",),
+    "frontier": ("jnp",),
+    "dist": ("jnp",),
+}
+
+
+def failover_chain(name: str) -> tuple:
+    """The fallback backends to try, in order, when ``name`` fails.
+    Unknown/custom backends degrade straight to the reference engine."""
+    if name == "jnp":
+        return ()
+    return DEFAULT_CHAIN.get(name, ("jnp",))

@@ -65,7 +65,11 @@ class UpdateStream:
             chunk = arr[lo:lo + batch_size]
             k = chunk.shape[0]
             out = np.zeros((batch_size, width), dtype=np.int32)
-            out[:k] = chunk
+            # NaN/Inf rows int-cast silently here BY DESIGN: batch views
+            # are device-bound int lanes, and admission validates the
+            # raw host arrays before any batch view is trusted
+            with np.errstate(invalid="ignore"):
+                out[:k] = chunk
             mask = np.zeros((batch_size,), dtype=bool)
             mask[:k] = True
             return out, mask
@@ -83,6 +87,19 @@ class UpdateStream:
     def batches(self, batch_size: int) -> Iterator[UpdateBatch]:
         for i in range(self.num_batches(batch_size)):
             yield self.batch(i, batch_size)
+
+    def window(self, batch_size: int, start: int,
+               count: int) -> "UpdateStream":
+        """A sub-stream covering batches ``[start, start+count)`` at this
+        ``batch_size``.  Because ``batch()`` slices adds and dels with the
+        same row arithmetic, ``window(bs, i, k).batch(j, bs)`` is
+        lane-identical to ``self.batch(i + j, bs)`` — which is what lets
+        the admission guard splice quarantined batches out of a stream
+        and run the surviving contiguous ranges through the fused
+        executor unchanged."""
+        lo = start * batch_size
+        hi = (start + count) * batch_size
+        return UpdateStream(adds=self.adds[lo:hi], dels=self.dels[lo:hi])
 
     def stacked(self, batch_size: int, start: int = 0,
                 count: int | None = None) -> UpdateBatch:

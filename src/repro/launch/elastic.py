@@ -29,11 +29,16 @@ from __future__ import annotations
 
 import time
 
+from repro.runtime.failover import backoff_delay
+
 
 def run_elastic(train_fn, args, max_restarts: int = 3,
-                backoff_s: float = 0.5):
+                backoff_s: float = 0.5, backoff_cap_s: float = 30.0):
     """Retry loop: restart `train_fn` from the latest checkpoint after a
-    transient failure, rebuilding device state each attempt."""
+    transient failure, rebuilding device state each attempt.  Restarts
+    back off exponentially with jitter (``backoff_delay``, shared with
+    the failover re-probe timer) so a cluster of restarting hosts does
+    not stampede the coordinator in lockstep."""
     attempt = 0
     while True:
         try:
@@ -48,11 +53,12 @@ def run_elastic(train_fn, args, max_restarts: int = 3,
             # hosts here and rebuild the mesh with a smaller 'data' axis.
             if getattr(args, "fail_at", None) is not None:
                 args.fail_at = None          # injected faults fire once
-            time.sleep(backoff_s)
+            time.sleep(backoff_delay(attempt - 1, base=backoff_s,
+                                     cap=backoff_cap_s))
 
 
 def run_elastic_session(make_session, work_fn, max_restarts: int = 3,
-                        backoff_s: float = 0.0):
+                        backoff_s: float = 0.5, backoff_cap_s: float = 30.0):
     """Tear-down → re-mesh → restore loop for ``repro.api`` sessions.
 
     ``make_session(attempt)`` builds the session for the given attempt —
@@ -64,6 +70,11 @@ def run_elastic_session(make_session, work_fn, max_restarts: int = 3,
     transient failure (RuntimeError/OSError — collective timeout, lost
     host) the session is dropped and rebuilt from the latest committed
     checkpoint; the atomic-rename commit protocol guarantees one exists.
+
+    Both elastic loops share the exponential-backoff-with-jitter policy
+    (the old ``backoff_s=0.0`` default here was a hot restart loop: a
+    persistent fault re-bound the session as fast as the device could
+    re-prepare it).
     """
     attempt = 0
     while True:
@@ -76,5 +87,5 @@ def run_elastic_session(make_session, work_fn, max_restarts: int = 3,
                 raise
             print(f"[elastic] failure: {e!r}; rebuilding session "
                   f"{attempt}/{max_restarts} from latest checkpoint")
-            if backoff_s:
-                time.sleep(backoff_s * attempt)
+            time.sleep(backoff_delay(attempt - 1, base=backoff_s,
+                                     cap=backoff_cap_s))

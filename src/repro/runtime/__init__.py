@@ -1,0 +1,43 @@
+"""repro.runtime — the fault-tolerant streaming runtime (DESIGN.md §6).
+
+Four cooperating pieces, all surfaced through ``repro.api`` sessions:
+
+  * **admission** — every ΔG batch is validated *before* it touches
+    device state (out-of-range ids, NaN/Inf/negative weights, oversized
+    batches, add+del conflicts) under a per-session policy
+    ``reject | clamp | quarantine``; quarantined batches land in a
+    bounded dead-letter buffer with machine-readable reasons.
+  * **errors** — the typed fault taxonomy (:class:`PoolOverflowError`,
+    :class:`KernelFailure`, :class:`CheckpointCorrupt`,
+    :class:`DivergenceError`, :class:`AdmissionError`) replacing the
+    bare ``RuntimeError``s the runtime used to die with.
+  * **failover** — a registry-level degradation chain
+    (``pallas → pallas_chained → jnp``): kernel failures at bind time or
+    mid-stream re-bind the session through the cross-backend
+    ``state_to_csr`` conversion path, sticky with periodic re-probe.
+  * **faults** — the chaos-injection harness: tests (and the
+    ``chaos-smoke`` CI job) arm named seams (kernel launch, pool merge,
+    checkpoint write, counter sync, segment scan) and assert sessions
+    survive bit-exact vs the oracle.
+
+Observability rides along as ``session.health`` (quarantine / retry /
+grow / failover counters, last error, current backend).
+"""
+from repro.runtime.errors import (RuntimeFault, AdmissionError,
+                                  PoolOverflowError, KernelFailure,
+                                  CheckpointCorrupt, DivergenceError)
+from repro.runtime.admission import (AdmissionGuard, DeadLetterBuffer,
+                                     QuarantineRecord, Violation,
+                                     ADMISSION_POLICIES)
+from repro.runtime.health import SessionHealth
+from repro.runtime.failover import FailoverPolicy, backoff_delay
+from repro.runtime import faults
+from repro.runtime import watchdog
+
+__all__ = [
+    "RuntimeFault", "AdmissionError", "PoolOverflowError", "KernelFailure",
+    "CheckpointCorrupt", "DivergenceError",
+    "AdmissionGuard", "DeadLetterBuffer", "QuarantineRecord", "Violation",
+    "ADMISSION_POLICIES", "SessionHealth", "FailoverPolicy",
+    "backoff_delay", "faults", "watchdog",
+]

@@ -17,6 +17,7 @@ Only the strategy surface the suite actually uses is implemented
 from __future__ import annotations
 
 import functools
+import inspect
 import random
 
 import pytest
@@ -87,6 +88,19 @@ except ImportError:                                    # fixed-seed fallback
             # pytest follows __wrapped__ back to the original signature
             # and would demand fixtures for the strategy-filled params.
             del wrapper.__wrapped__
+            # ...but parametrize/fixture params NOT drawn by strategies
+            # must stay visible, or stacking @parametrize over @given
+            # breaks ("function uses no argument 'x'"): re-expose the
+            # original signature minus the strategy-filled names
+            # (positional strategies fill from the right, as hypothesis
+            # does).
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            keep = names[:len(names) - len(strategies)] if strategies \
+                else names
+            keep = [n for n in keep if n not in kw_strategies]
+            wrapper.__signature__ = sig.replace(
+                parameters=[sig.parameters[n] for n in keep])
             return pytest.mark.hypothesis_fallback(wrapper)
 
         return decorate

@@ -456,6 +456,91 @@ def assert_pagerank_save_restore(backend: str, sc: Scenario, ckpt_dir,
                 f"{backend}")
 
 
+# ---------------------------------------------------------------------------
+# Adversarial-stream runners (admission guard, DESIGN.md §6): a
+# pure-poison batch PREPENDED to the scenario stream shifts every clean
+# batch by exactly one, so after the guard disposes of batch 0 (clamp
+# masks every lane — a no-op batch; quarantine dead-letters it) the
+# applied updates are identical to the clean stream and the oracle is
+# unchanged.
+# ---------------------------------------------------------------------------
+
+def poison_stream(sc: Scenario, with_weight_poison: bool = False
+                  ) -> UpdateStream:
+    """The scenario stream with one batch of poison rows up front:
+    out-of-range and negative vertex ids (never clampable into a real
+    update), plus — for the quarantine cells — one NaN-weight row with
+    valid ids (only detectable on the raw host arrays;
+    ``UpdateStream.batch`` would silently int-cast it)."""
+    bs, n = sc.batch_size, sc.n
+    rows = [(n + 1 + i, 0, 1) if i % 2 == 0 else (0, -(i + 1), 1)
+            for i in range(bs)]
+    pa = np.asarray(rows, np.float64).reshape(bs, 3)
+    if with_weight_poison:
+        pa[0] = (0, min(1, n - 1), np.nan)
+    adds = np.concatenate(
+        [pa, np.asarray(sc.stream.adds, np.float64).reshape(-1, 3)])
+    pd = np.asarray([(n + 7, n + 8)] * bs, np.int64)
+    dels = np.concatenate(
+        [pd, np.asarray(sc.stream.dels, np.int64).reshape(-1, 2)])
+    return UpdateStream(adds=adds, dels=dels)
+
+
+def assert_sssp_poison(backend: str, sc: Scenario, policy: str):
+    """DSL one-shot cell under attack: ``run`` must survive the poison
+    batch per policy and end oracle-exact against the CLEAN stream."""
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                         sc.stream.adds, sc.stream.dels)
+    ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
+    pstream = poison_stream(sc, with_weight_poison=(policy == "quarantine"))
+    sess = program("sssp").bind(csr, backend=backend,
+                                capacity=sc.diff_capacity,
+                                admission=policy)
+    res = sess.run("DynSSSP", updateBatch=pstream,
+                   batchSize=sc.batch_size, src=sc.src)
+    got = np.minimum(res.props.host("dist").astype(np.int64), oracles.INF)
+    np.testing.assert_array_equal(
+        got, ref,
+        err_msg=f"[{sc.name}/{policy}] poisoned DynSSSP != clean oracle "
+                f"on {backend}")
+    h = sess.health
+    if policy == "quarantine":
+        assert h.quarantined >= 1, "poison batch must be dead-lettered"
+        assert len(sess.dead_letter) >= 1
+    else:
+        assert h.clamped >= 1, "poison batch must be sanitized"
+    assert h.admitted >= pstream.num_batches(sc.batch_size) - 1
+
+
+def assert_sssp_stream_poison(backend: str, sc: Scenario, policy: str,
+                              segment_size: int = 4):
+    """Fused-executor cell under attack: poison batches are spliced out
+    per policy while clean contiguous ranges still run fused; final
+    state oracle-exact against the clean stream."""
+    csr = build_csr(sc.n, sc.edges, sc.w)
+    e2, w2 = oracles.edges_after_updates(sc.n, sc.edges, sc.w,
+                                         sc.stream.adds, sc.stream.dels)
+    ref = oracles.sssp_oracle(sc.n, e2, w2, sc.src)
+    pstream = poison_stream(sc, with_weight_poison=(policy == "quarantine"))
+    sess = api.bind_graph(csr, backend=backend, capacity=sc.diff_capacity,
+                          admission=policy)
+    props0 = sess.call(hand_sssp.static_sssp, sc.src)
+    sess.run_stream(pstream, sc.batch_size, hand_sssp.stream_step, props0,
+                    segment_size=segment_size)
+    got = np.minimum(sess.props.host("dist").astype(np.int64), oracles.INF)
+    np.testing.assert_array_equal(
+        got, ref,
+        err_msg=f"[{sc.name}/{policy}] poisoned sssp run_stream != clean "
+                f"oracle on {backend}")
+    h = sess.health
+    if policy == "quarantine":
+        assert h.quarantined >= 1 and len(sess.dead_letter) >= 1
+    else:
+        assert h.clamped >= 1
+    assert sess.stream_cursor == pstream.num_batches(sc.batch_size)
+
+
 def assert_tc(backend: str, sc: Scenario):
     csr = build_csr(sc.n, sc.edges, sc.w)
     args = {"updateBatch": sc.stream, "batchSize": sc.batch_size}

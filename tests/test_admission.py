@@ -1,0 +1,359 @@
+"""ΔG admission guard: unit coverage + a fixed-seed adversarial fuzz
+suite driving hostile update streams through every registered backend.
+
+The fuzz invariant is the acceptance bar from DESIGN.md §6: whatever
+garbage arrives, the session either applies a well-defined subset of it
+(clamp: bad-id lanes masked; quarantine: whole poison batches
+dead-lettered) and the final alive-edge state matches replaying exactly
+that subset through an *unguarded* session on the same backend — or
+raises the typed ``AdmissionError`` (reject) with only the clean prefix
+applied.  The reference reimplements the guard's *dispositions* with
+independent numpy rules, while engine semantics (duplicate lanes,
+self-loops, re-adds) cancel out between the two sessions.
+"""
+import numpy as np
+import pytest
+
+import repro.api as api
+from _hypothesis_compat import given, settings, st
+from repro.core.engine import state_to_csr
+from repro.graph import build_csr
+from repro.graph.updates import UpdateStream
+from repro.runtime.admission import (ADMISSION_POLICIES, AdmissionGuard,
+                                     DeadLetterBuffer, batch_violations,
+                                     sanitize_batch,
+                                     stream_batch_violations)
+from repro.runtime.errors import AdmissionError
+from repro.runtime.health import SessionHealth
+
+FAST_BACKENDS = ["jnp", "pallas", "frontier"]
+SLOW_BACKENDS = ["dist", "pallas_chained"]
+ALL_BACKENDS = (FAST_BACKENDS +
+                [pytest.param(b, marks=pytest.mark.slow)
+                 for b in SLOW_BACKENDS])
+
+
+def _batch(adds, dels=None, bs=None):
+    adds = np.asarray(adds, np.float64).reshape(-1, 3)
+    dels = (np.zeros((0, 2), np.int64) if dels is None
+            else np.asarray(dels, np.int64).reshape(-1, 2))
+    bs = bs or max(len(adds), len(dels), 1)
+    return UpdateStream(adds=adds, dels=dels).batch(0, bs)
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+
+def test_policy_names_validated():
+    assert set(ADMISSION_POLICIES) == {"reject", "clamp", "quarantine",
+                                       "off"}
+    with pytest.raises(ValueError):
+        AdmissionGuard("shrug")
+    assert AdmissionGuard(None).policy == "off"
+
+
+def test_dead_letter_buffer_bounded():
+    buf = DeadLetterBuffer(capacity=3)
+    for i in range(8):
+        buf.push(i)  # records are opaque to the buffer
+    assert len(buf) == 3 and buf.total == 8 and buf.evicted == 5
+    assert buf.records() == [5, 6, 7]
+
+
+def test_batch_violation_kinds():
+    n = 16
+    # raw rows so NaN survives: ids out both ends, NaN weight, conflict
+    stream = UpdateStream(
+        adds=np.array([[99.0, 1, 1], [-2.0, 1, 1], [0, 1, np.nan],
+                       [3, 4, 2]]),
+        dels=np.array([[3, 4], [20, 20]], np.int64))
+    kinds = {v.kind for v in stream_batch_violations(stream, 4, n)[0]}
+    assert kinds == {"add_id_out_of_range", "del_id_out_of_range",
+                     "weight_invalid", "add_del_conflict"}
+    # batch-level sees the id violations and the conflict; the NaN was
+    # int-cast to weight 1 by the batch view (why streams must be
+    # inspected on the raw host arrays)
+    bkinds = {v.kind for v in
+              batch_violations(stream.batch(0, 4), n)}
+    assert {"add_id_out_of_range", "del_id_out_of_range",
+            "add_del_conflict"} <= bkinds
+    assert "weight_invalid" not in bkinds
+
+
+def test_batch_oversized_never_clamped():
+    health = SessionHealth()
+    guard = AdmissionGuard("clamp", max_batch=4, health=health)
+    big = _batch([(0, 1, 1)] * 8)
+    assert guard.admit(big, n=16) is None       # quarantined, not clamped
+    assert health.quarantined == 1 and health.clamped == 0
+    assert guard.buffer.records()[0].reasons[0].kind == "batch_oversized"
+
+
+def test_sanitize_preserves_valid_lanes_bit_exact():
+    n = 16
+    b = _batch([(1, 2, 7), (99, 3, 1), (4, -5, 2), (6, 7, 9)],
+               [(1, 2), (77, 0)])
+    s = sanitize_batch(b, n)
+    np.testing.assert_array_equal(np.asarray(s.add_mask),
+                                  [True, False, False, True])
+    np.testing.assert_array_equal(np.asarray(s.del_mask),
+                                  [True, False, False, False])
+    keep = np.asarray(s.add_mask)
+    for f in ("add_src", "add_dst", "add_w"):
+        np.testing.assert_array_equal(np.asarray(getattr(s, f))[keep],
+                                      np.asarray(getattr(b, f))[keep])
+    assert not np.asarray(s.add_src)[~keep].any(), "dead lanes zeroed"
+
+
+def test_conflict_only_batch_admitted_untouched_under_clamp():
+    health = SessionHealth()
+    guard = AdmissionGuard("clamp", health=health)
+    b = _batch([(1, 2, 7)], [(1, 2)])
+    out = guard.admit(b, n=16)
+    assert out is b, "conflict-only batch must pass through unchanged"
+    assert health.conflicts == 1 and health.admitted == 1
+    assert health.clamped == 0
+
+    # ...but the strict policies treat it as a violation like any other
+    strict = AdmissionGuard("reject")
+    with pytest.raises(AdmissionError) as ei:
+        strict.admit(b, n=16)
+    assert any(r.kind == "add_del_conflict" for r in ei.value.reasons)
+
+
+def test_stream_and_batch_agree_on_id_violations():
+    n = 12
+    rng = np.random.default_rng(3)
+    adds = rng.integers(-4, n + 4, size=(24, 3)).astype(np.float64)
+    adds[:, 2] = np.abs(adds[:, 2]) + 1
+    dels = rng.integers(-4, n + 4, size=(10, 2)).astype(np.int64)
+    stream = UpdateStream(adds=adds, dels=dels)
+    per = stream_batch_violations(stream, 4, n)
+    for i in range(stream.num_batches(4)):
+        bkinds = {v.kind: v.count for v in
+                  batch_violations(stream.batch(i, 4), n)}
+        skinds = {v.kind: v.count for v in per.get(i, [])}
+        for kind in ("add_id_out_of_range", "del_id_out_of_range"):
+            assert bkinds.get(kind, 0) == skinds.get(kind, 0), \
+                f"batch {i}: stream/batch disagree on {kind}"
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed adversarial fuzz through every registered backend
+# ---------------------------------------------------------------------------
+
+def _base_graph(rng, n):
+    e = rng.integers(0, n, size=(3 * n, 2)).astype(np.int64)
+    e = np.unique(e[e[:, 0] != e[:, 1]], axis=0)
+    w = rng.integers(1, 9, size=e.shape[0]).astype(np.int32)
+    return build_csr(n, e, w)
+
+
+def _hostile_stream(rng, n, nb, bs, weight_poison=True):
+    """~40% hostile lanes: ids out both ends, duplicate lanes, and
+    (optionally) NaN/Inf/negative raw weights."""
+    adds, dels = [], []
+    for _ in range(nb * bs):
+        roll = rng.random()
+        if roll < 0.55:                         # clean add
+            u, v = rng.integers(0, n, 2)
+            adds.append((float(u), float(v), float(rng.integers(1, 9))))
+        elif roll < 0.72:                       # bad ids
+            adds.append((float(rng.integers(n, n + 9)),
+                         float(rng.integers(-6, n)), 1.0))
+        elif roll < 0.82 and weight_poison:     # bad weight, valid ids
+            u, v = rng.integers(0, n, 2)
+            adds.append((float(u), float(v),
+                         float(rng.choice([np.nan, np.inf, -3.0]))))
+        else:                                   # duplicate of an earlier lane
+            adds.append(adds[rng.integers(0, len(adds))] if adds
+                        else (0.0, 1.0, 1.0))
+    for _ in range(nb * bs // 2):
+        if rng.random() < 0.7:
+            u, v = rng.integers(0, n, 2)
+            dels.append((int(u), int(v)))
+        else:
+            dels.append((int(rng.integers(-5, 0)),
+                         int(rng.integers(0, n))))
+    return UpdateStream(adds=np.asarray(adds, np.float64).reshape(-1, 3),
+                        dels=np.asarray(dels, np.int64).reshape(-1, 2))
+
+
+def _lane_ok(src, dst, mask, n):
+    return mask & (src >= 0) & (src < n) & (dst >= 0) & (dst < n)
+
+
+def _expected_batches(stream, bs, n, policy):
+    """Reference dispositions, written against the CONTRACT (not the
+    guard's code): per batch, out-of-range ids are the poison, conflicts
+    block only the strict policies, raw-weight poison is invisible at
+    batch level (the batch view already repaired it — identically for
+    guarded and unguarded sessions).  Returns (batches_to_apply,
+    first_rejected_index_or_None)."""
+    out = []
+    for i in range(stream.num_batches(bs)):
+        b = stream.batch(i, bs)
+        a_src, a_dst = np.asarray(b.add_src), np.asarray(b.add_dst)
+        am, dm = np.asarray(b.add_mask), np.asarray(b.del_mask)
+        d_src, d_dst = np.asarray(b.del_src), np.asarray(b.del_dst)
+        a_ok = _lane_ok(a_src, a_dst, am, n)
+        d_ok = _lane_ok(d_src, d_dst, dm, n)
+        bad_ids = bool((am & ~a_ok).any() or (dm & ~d_ok).any())
+        conflict = bool(
+            {(int(u), int(v)) for u, v in zip(a_src[a_ok], a_dst[a_ok])}
+            & {(int(u), int(v)) for u, v in zip(d_src[d_ok], d_dst[d_ok])})
+        if policy == "reject" and (bad_ids or conflict):
+            return out, i
+        if policy == "quarantine" and (bad_ids or conflict):
+            continue
+        out.append(sanitize_batch(b, n) if (policy == "clamp" and bad_ids)
+                   else b)
+    return out, None
+
+
+def _alive_edges(sess):
+    import jax
+    tree, meta = sess.engine.pack_state(sess.handle)
+    tree = jax.tree_util.tree_map(np.asarray, tree)
+    c, _ = state_to_csr(tree, meta)
+    return sorted(zip(np.asarray(c.src).tolist(),
+                      np.asarray(c.dst).tolist(),
+                      np.asarray(c.w).tolist()))
+
+
+def _replay(csr, backend, batches):
+    ref = api.bind_graph(csr, backend=backend, admission="off")
+    for b in batches:
+        ref.apply(b)
+    return _alive_edges(ref)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("policy", ["clamp", "quarantine"])
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_fuzz_hostile_stream_policy_exact(backend, policy, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 24))
+    bs = int(rng.integers(2, 6))
+    nb = int(rng.integers(2, 5))
+    csr = _base_graph(rng, n)
+    stream = _hostile_stream(rng, n, nb, bs)
+
+    sess = api.bind_graph(csr, backend=backend, admission=policy)
+    for i in range(nb):
+        sess.apply(stream.batch(i, bs))
+
+    want_batches, _ = _expected_batches(stream, bs, n, policy)
+    assert _alive_edges(sess) == _replay(csr, backend, want_batches), \
+        f"seed={seed} n={n} bs={bs} nb={nb}"
+    h = sess.health
+    assert h.admitted + h.quarantined == nb and h.rejected == 0
+    assert h.quarantined == nb - len(want_batches)
+    assert len(sess.dead_letter) == h.quarantined
+    assert sess.stream_cursor == nb
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_fuzz_reject_applies_only_clean_prefix(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 24))
+    bs, nb = 4, 4
+    csr = _base_graph(rng, n)
+    stream = _hostile_stream(rng, n, nb, bs)
+
+    sess = api.bind_graph(csr, backend="jnp", admission="reject")
+    prefix, first = _expected_batches(stream, bs, n, "reject")
+    if first is None:
+        for i in range(nb):
+            sess.apply(stream.batch(i, bs))
+        assert sess.health.rejected == 0
+    else:
+        with pytest.raises(AdmissionError) as ei:
+            for i in range(nb):
+                sess.apply(stream.batch(i, bs))
+        assert ei.value.reasons, "machine-readable reasons required"
+        assert sess.health.rejected == 1
+        assert sess.stream_cursor == first, \
+            "rejected batch must not advance the cursor"
+    assert _alive_edges(sess) == _replay(csr, "jnp", prefix)
+
+
+# ---------------------------------------------------------------------------
+# stream-level admission: the fused splice path matches per-batch applies,
+# and raw-array weight validation catches what batch views cannot
+# ---------------------------------------------------------------------------
+
+def _step(view, h, batch, carry):
+    h = view.update_del(h, batch)
+    h = view.update_add(h, batch)
+    return h, carry
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("policy", ["clamp", "quarantine"])
+def test_stream_splice_matches_per_batch_applies(backend, policy):
+    # id-poison only: raw-weight poison is (by design) visible to the
+    # stream pass but not the batch pass, so the two paths would
+    # legitimately diverge on it under quarantine
+    rng = np.random.default_rng(11)
+    n, bs, nb = 20, 4, 4
+    csr = _base_graph(rng, n)
+    stream = _hostile_stream(rng, n, nb, bs, weight_poison=False)
+
+    a = api.bind_graph(csr, backend=backend, admission=policy)
+    a.run_stream(stream, bs, _step, None)
+
+    b = api.bind_graph(csr, backend=backend, admission=policy)
+    for i in range(nb):
+        b.apply(stream.batch(i, bs))
+
+    assert _alive_edges(a) == _alive_edges(b)
+    assert a.health.quarantined == b.health.quarantined
+    assert a.stream_cursor == b.stream_cursor == nb
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("policy", ["reject", "clamp", "quarantine"])
+def test_zero_length_batch_is_a_counted_noop(backend, policy):
+    csr = _base_graph(np.random.default_rng(5), 10)
+    empty = UpdateStream(adds=np.zeros((0, 3)),
+                         dels=np.zeros((0, 2), np.int64)).batch(0, 4)
+    sess = api.bind_graph(csr, backend=backend, admission=policy)
+    before = _alive_edges(sess)
+    sess.apply(empty)                  # all lanes masked: no device work
+    assert _alive_edges(sess) == before
+    assert sess.health.empty_skipped == 1
+    assert sess.health.rejected == 0 and sess.health.quarantined == 0
+    assert sess.stream_cursor == 1
+
+
+def test_stream_quarantine_catches_raw_weight_poison():
+    # batch 1 is poisoned ONLY through raw NaN/negative weights — the
+    # padded batch view int-casts them to weight 1, so only the raw-array
+    # stream pass can see them; quarantine must drop the whole batch
+    n, bs = 12, 3
+    csr = _base_graph(np.random.default_rng(0), n)
+    adds = np.array([[0, 1, 2], [1, 2, 3], [2, 3, 4],
+                     [3, 4, np.nan], [4, 5, -7.0], [5, 6, np.inf],
+                     [6, 7, 5], [7, 8, 6], [8, 9, 7]], np.float64)
+    stream = UpdateStream(adds=adds, dels=np.zeros((0, 2), np.int64))
+
+    sess = api.bind_graph(csr, backend="jnp", admission="quarantine")
+    sess.run_stream(stream, bs, _step, None)
+    assert sess.health.quarantined == 1
+    rec = sess.dead_letter[0]
+    assert rec.index == 1
+    assert {r.kind for r in rec.reasons} == {"weight_invalid"}
+
+    want = _replay(csr, "jnp", [stream.batch(0, bs), stream.batch(2, bs)])
+    assert _alive_edges(sess) == want
+
+    # ...and the batch-level path admits the same batch (weights were
+    # already repaired to 1 by the view): documents the layering contract
+    b2 = api.bind_graph(csr, backend="jnp", admission="quarantine")
+    for i in range(3):
+        b2.apply(stream.batch(i, bs))
+    assert b2.health.quarantined == 0

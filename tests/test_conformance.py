@@ -15,7 +15,8 @@ import pytest
 
 from conformance import (assert_pagerank, assert_pagerank_save_restore,
                          assert_pagerank_stream, assert_sssp,
-                         assert_sssp_save_restore, assert_sssp_stream,
+                         assert_sssp_poison, assert_sssp_save_restore,
+                         assert_sssp_stream, assert_sssp_stream_poison,
                          assert_tc, assert_tc_stream, digraph_scenario,
                          sym_scenario)
 
@@ -104,6 +105,47 @@ def test_stream_conformance_pagerank(scenario, backend):
                                 fast=DIST_STREAM_FAST, prefix="stream-"))
 def test_stream_conformance_tc(scenario, backend):
     assert_tc_stream(backend, sym_scenario(scenario))
+
+
+# ---------------------------------------------------------------------------
+# Adversarial-stream cells (admission guard, DESIGN.md §6): a poison
+# batch prepended to the scenario stream must leave the final state
+# oracle-exact against the CLEAN stream after the guard disposes of it
+# (clamp → masked no-op, quarantine → dead-letter).  Both the DSL
+# one-shot path and the fused streaming executor get cells on every
+# registered backend.
+# ---------------------------------------------------------------------------
+
+POISON_SCENARIOS = ["batch8", "batch64"]
+POISON_POLICIES = ["clamp", "quarantine"]
+
+
+def _poison_cells(scenarios, backends, fast=DIST_FAST):
+    out = []
+    for s in scenarios:
+        for b in backends:
+            for p in POISON_POLICIES:
+                marks = ()
+                if b in _MOSTLY_SLOW and s not in fast:
+                    marks = (pytest.mark.slow,)
+                out.append(pytest.param(s, b, p, marks=marks,
+                                        id=f"poison-{s}-{b}-{p}"))
+    return out
+
+
+@pytest.mark.parametrize("scenario,backend,policy",
+                         _poison_cells(POISON_SCENARIOS, BACKENDS))
+def test_conformance_sssp_poison(scenario, backend, policy):
+    assert_sssp_poison(backend, digraph_scenario(scenario), policy)
+
+
+@pytest.mark.parametrize("scenario,backend,policy",
+                         _poison_cells(["batch8"],
+                                       BACKENDS + ["pallas_chained",
+                                                   "frontier"],
+                                       fast=DIST_STREAM_FAST))
+def test_stream_conformance_sssp_poison(scenario, backend, policy):
+    assert_sssp_stream_poison(backend, digraph_scenario(scenario), policy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,357 @@
+"""Chaos-injection suite (DESIGN.md §6): every named fault seam must
+either degrade to a surviving backend with state equal to the
+uninterrupted run, or raise a typed error after rolling back — never
+wedge, never silently corrupt.  Health counters must reflect every
+event.
+"""
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core.engine import state_to_csr
+from repro.graph import build_csr
+from repro.graph.updates import UpdateStream
+from repro.runtime import faults
+from repro.runtime.errors import (AdmissionError, CheckpointCorrupt,
+                                  DivergenceError, KernelFailure,
+                                  PoolOverflowError, RuntimeFault)
+from repro.runtime.failover import FailoverPolicy, backoff_delay
+
+
+@pytest.fixture(autouse=True)
+def _clean_seams():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _graph(n=32):
+    edges = np.array([(i, (i + 1) % n) for i in range(n)] +
+                     [(0, 5), (3, 9)])
+    return build_csr(n, edges)
+
+
+def _stream(rows=((1, 7, 3), (2, 8, 1), (4, 11, 2), (5, 12, 1))):
+    return UpdateStream(adds=np.asarray(rows, np.int64),
+                        dels=np.zeros((0, 2), np.int64))
+
+
+def _step(view, h, batch, carry):
+    h = view.update_del(h, batch)
+    h = view.update_add(h, batch)
+    return h, carry
+
+
+def _alive_edges(sess):
+    import jax
+    tree, meta = sess.engine.pack_state(sess.handle)
+    tree = jax.tree_util.tree_map(np.asarray, tree)
+    c, _ = state_to_csr(tree, meta)
+    return sorted(zip(np.asarray(c.src).tolist(),
+                      np.asarray(c.dst).tolist(),
+                      np.asarray(c.w).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# harness mechanics
+# ---------------------------------------------------------------------------
+
+def test_injector_counts_and_scopes():
+    with faults.inject("counter_sync", exc=RuntimeError("boom"),
+                       after=1, times=1) as inj:
+        faults.fire("counter_sync")            # skipped (after=1)
+        with pytest.raises(RuntimeError):
+            faults.fire("counter_sync")
+        faults.fire("counter_sync")            # exhausted (times=1)
+        assert inj.fired == 1 and inj.seen == 3
+    faults.fire("counter_sync")                # registry empty again
+
+
+def test_injector_match_and_unknown_seam():
+    with pytest.raises(ValueError):
+        faults.inject("not_a_seam").__enter__()
+    with faults.inject("kernel_launch",
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        faults.fire("kernel_launch", engine="jnp")       # no match
+        with pytest.raises(KernelFailure):
+            faults.fire("kernel_launch", engine="pallas")
+
+
+# ---------------------------------------------------------------------------
+# typed errors + bounded overflow retry
+# ---------------------------------------------------------------------------
+
+def test_error_taxonomy_roots():
+    for cls in (AdmissionError, PoolOverflowError, KernelFailure,
+                CheckpointCorrupt, DivergenceError):
+        assert issubclass(cls, RuntimeFault)
+        assert issubclass(cls, RuntimeError)
+
+
+def test_pool_overflow_bounded_and_rolled_back():
+    """A batch that can never fit raises PoolOverflowError after the
+    bounded grow budget — with the pre-batch state restored — instead of
+    growing device memory forever."""
+    csr = _graph()
+    sess = api.bind_graph(csr, backend="jnp", capacity=4)
+    sess.apply(_stream().batch(0, 4))          # prepare + one clean batch
+    before = _alive_edges(sess)
+
+    # make grow a no-op so the overflow can never be repaired
+    sess._max_grow_attempts = 3
+    sess.engine.grow = lambda g, factor=2.0: g
+    big = UpdateStream(
+        adds=np.array([(i % 30, (i * 7 + 1) % 31, 1) for i in range(64)]),
+        dels=np.zeros((0, 2), np.int64))
+    with pytest.raises(PoolOverflowError) as ei:
+        sess.apply(big.batch(0, 64))
+    err = ei.value
+    assert err.attempts == 3
+    assert err.batch is not None
+    assert len(err.counters) == 3
+    assert sess.health.overflow_retries >= 3
+    assert sess.health.last_error_kind == "PoolOverflowError"
+    assert _alive_edges(sess) == before, "state must roll back"
+
+
+def test_checkpoint_write_seam_and_corrupt_manifest(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+    csr = _graph()
+    sess = api.bind_graph(csr, backend="jnp")
+    sess.apply(_stream().batch(0, 4))
+    with faults.inject("checkpoint_write", exc=OSError("disk gone"),
+                       match=lambda ctx: ctx.get("point") == "manifest"):
+        with pytest.raises(OSError):
+            sess.save(tmp_path)
+    assert ckpt.latest_step(tmp_path) is None, \
+        "crashed save must not commit"
+    sess.save(tmp_path)                         # clean save commits
+    step = ckpt.latest_step(tmp_path)
+    assert step is not None
+
+    # corrupt the committed manifest: restore must raise the typed error
+    d = tmp_path / f"step_{step:08d}"
+    (d / "manifest.json").write_text("{ not json")
+    with pytest.raises(CheckpointCorrupt) as ei:
+        api.restore_session(tmp_path)
+    assert ei.value.step == step
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: every seam either fails over bit-exactly or
+# raises typed after rollback
+# ---------------------------------------------------------------------------
+
+def test_kernel_launch_failover_bit_exact():
+    csr, stream = _graph(), _stream()
+    ref = api.bind_graph(csr, backend="jnp")
+    ref.run_stream(stream, 2, _step, None)
+
+    sess = api.bind_graph(csr, backend="pallas", failover=True)
+    with faults.inject("kernel_launch", times=None,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        sess.run_stream(stream, 2, _step, None)
+    h = sess.health
+    assert sess.backend_name == "jnp"
+    assert h.degraded and h.failovers == 2 and h.kernel_failures >= 1
+    assert _alive_edges(sess) == _alive_edges(ref)
+
+
+def test_segment_scan_failover_bit_exact():
+    csr, stream = _graph(), _stream()
+    ref = api.bind_graph(csr, backend="jnp")
+    ref.run_stream(stream, 2, _step, None)
+
+    sess = api.bind_graph(csr, backend="pallas", failover=True)
+    with faults.inject("segment_scan", times=1,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        sess.run_stream(stream, 2, _step, None)
+    assert sess.health.failovers >= 1
+    assert _alive_edges(sess) == _alive_edges(ref)
+
+
+def test_pool_merge_failover_bit_exact():
+    """A fault at the pool-merge (grow) seam mid-stream degrades and the
+    survivor replays — final state equal to an uninterrupted run."""
+    csr = _graph()
+    big = UpdateStream(
+        adds=np.array([(i % 30, (i * 7 + 1) % 31, 1) for i in range(48)]),
+        dels=np.zeros((0, 2), np.int64))
+    ref = api.bind_graph(csr, backend="jnp", capacity=4)
+    ref.run_stream(big, 8, _step, None)
+
+    sess = api.bind_graph(csr, backend="pallas", capacity=4, failover=True)
+    with faults.inject("pool_merge", times=1,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        sess.run_stream(big, 8, _step, None)
+    assert sess.health.failovers >= 1
+    assert _alive_edges(sess) == _alive_edges(ref)
+
+
+def test_no_failover_raises_typed_with_rollback():
+    """Without a failover chain the kernel fault surfaces to the caller
+    — but only after the per-batch rollback ran, so the session state is
+    the pre-batch graph and stays usable."""
+    csr, stream = _graph(), _stream()
+    sess = api.bind_graph(csr, backend="pallas")
+    sess.apply(stream.batch(0, 2))
+    before = _alive_edges(sess)
+    with faults.inject("kernel_launch", times=None,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        with pytest.raises(KernelFailure):
+            sess.apply(stream.batch(1, 2))
+    assert _alive_edges(sess) == before
+    sess.apply(stream.batch(1, 2))             # seam clear: still serving
+    assert sess.health.last_error_kind == "KernelFailure"
+
+
+def test_chain_exhausted_raises_kernel_failure():
+    csr, stream = _graph(), _stream()
+    sess = api.bind_graph(csr, backend="pallas", failover=True)
+    sess.apply(stream.batch(0, 2))
+    # jnp's update path crosses no kernel seam, so break it directly
+    with faults.inject("kernel_launch", times=None), \
+            faults.inject("counter_sync", times=None,
+                          exc=RuntimeError("sync dead"),
+                          match=lambda ctx: ctx.get("engine") == "jnp"):
+        with pytest.raises(KernelFailure) as ei:
+            sess.apply(stream.batch(1, 2))
+    assert "failover chain" in str(ei.value)
+    assert sess.health.kernel_failures >= 2
+
+
+def test_armed_session_failover_preserves_loop():
+    """The armed DSL Batch loop must survive a mid-stream backend hop:
+    the paused frame is re-staged on the survivor and the final dist is
+    bit-identical to an undisturbed jnp run."""
+    from repro.dsl_programs import path as program_path
+    csr, stream = _graph(), _stream()
+    prog = api.compile(program_path("sssp"))
+    args = dict(batchSize=2, src=0)
+
+    ref = prog.bind(csr, backend="jnp").run(
+        "DynSSSP", updateBatch=stream, **args)
+    ref_dist = ref.props.host("dist")
+
+    sess = prog.bind(csr, backend="pallas", failover=True)
+    sess.run("DynSSSP", **args)                 # arm
+    with faults.inject("kernel_launch", times=None,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        res = sess.run_stream(stream, 2)
+    assert sess.backend_name == "jnp" and sess.armed
+    np.testing.assert_array_equal(res.props.host("dist"), ref_dist)
+
+
+def test_reprobe_returns_to_preferred():
+    """Sticky degradation re-probes: once the fault clears and the
+    backoff window elapses, the session migrates back to the preferred
+    backend and health records the recovery."""
+    csr, stream = _graph(), _stream()
+    sess = api.bind_graph(csr, backend="pallas", failover=True)
+    sess._failover.probe_base_s = 0.0           # probe immediately
+    with faults.inject("kernel_launch", times=None,
+                       match=lambda ctx: ctx.get("engine") == "pallas"):
+        sess.run_stream(stream, 2, _step, None)
+    assert sess.health.degraded
+    sess.apply(UpdateStream(adds=np.array([[6, 13, 1]]),
+                            dels=np.zeros((0, 2), np.int64)).batch(0, 2))
+    assert sess.backend_name == "pallas"
+    assert not sess.health.degraded
+    assert sess.health.reprobes >= 1
+
+
+# ---------------------------------------------------------------------------
+# divergence watchdog
+# ---------------------------------------------------------------------------
+
+def test_divergence_watchdog_fires_on_nan_props():
+    import jax.numpy as jnp
+    csr = _graph()
+    sess = api.bind_graph(csr, backend="jnp")
+    _ = sess.handle
+    sess._props = {"rank": jnp.full(csr.n, jnp.nan, jnp.float32),
+                   "dist": jnp.zeros(csr.n, jnp.int32)}
+    with pytest.raises(DivergenceError) as ei:
+        sess.check_divergence()
+    assert "rank" in ei.value.props and "dist" not in ei.value.props
+    assert sess.health.divergence_probes >= 1
+    assert sess.health.last_error_kind == "DivergenceError"
+
+
+def test_watchdog_clean_props_pass():
+    import jax.numpy as jnp
+    csr = _graph()
+    sess = api.bind_graph(csr, backend="jnp")
+    _ = sess.handle
+    sess._props = {"rank": jnp.ones(csr.n, jnp.float32)}
+    sess.check_divergence()                     # must not raise
+    assert sess.health.divergence_probes == 1
+
+
+# ---------------------------------------------------------------------------
+# shared backoff policy (elastic restarts + failover re-probe)
+# ---------------------------------------------------------------------------
+
+def test_backoff_delay_shape():
+    rng = __import__("random").Random(7)
+    d0 = backoff_delay(0, base=0.5, cap=30.0, rng=rng)
+    d4 = backoff_delay(4, base=0.5, cap=30.0, rng=rng)
+    assert 0.25 <= d0 <= 0.5
+    assert 4.0 <= d4 <= 8.0
+    assert backoff_delay(50, base=0.5, cap=30.0, rng=rng) <= 30.0
+    assert backoff_delay(3, base=0.0) == 0.0
+
+
+def test_failover_policy_probe_windows():
+    pol = FailoverPolicy("pallas", ("jnp",), probe_base_s=10.0)
+    assert pol.candidates("pallas") == ["jnp"]
+    assert pol.candidates("jnp") == []
+    pol.degraded_from(now=100.0)
+    assert not pol.should_probe(now=100.0 + 1.0)
+    assert pol.should_probe(now=100.0 + 3600.0)
+    pol.probe_failed(now=200.0)                 # window doubles: >= 10s
+    assert not pol.should_probe(now=200.0 + 9.0)
+    pol.recovered()
+    assert not pol.should_probe(now=1e9)
+
+
+def test_run_elastic_backs_off_and_restarts(monkeypatch):
+    from repro.launch import elastic
+    sleeps = []
+    monkeypatch.setattr(elastic.time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky(args):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "done"
+
+    assert elastic.run_elastic(flaky, None, max_restarts=3,
+                               backoff_s=0.5) == "done"
+    assert len(sleeps) == 2 and all(s > 0 for s in sleeps)
+    assert sleeps[1] > sleeps[0] * 0.5          # exponential-ish w/ jitter
+
+
+def test_run_elastic_session_backs_off(monkeypatch):
+    from repro.launch import elastic
+    sleeps = []
+    monkeypatch.setattr(elastic.time, "sleep", sleeps.append)
+    csr = _graph()
+    made = []
+
+    def make_session(attempt):
+        made.append(attempt)
+        return api.bind_graph(csr, backend="jnp")
+
+    def work(sess):
+        if len(made) < 2:
+            raise RuntimeError("lost host")
+        sess.apply(_stream().batch(0, 4))
+        return "ok"
+
+    assert elastic.run_elastic_session(make_session, work,
+                                       max_restarts=2) == "ok"
+    assert made == [0, 1]
+    assert len(sleeps) == 1 and sleeps[0] > 0, \
+        "default backoff must be non-zero (the old 0.0 was a hot loop)"
