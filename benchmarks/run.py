@@ -13,6 +13,8 @@
                       dry-run artifacts (reads benchmarks/results/dryrun.json)
   robustness          guarded vs unguarded streaming (ΔG admission guard
                       overhead; ISSUE 8 < 5% gate, warn-only)
+  serve               multi-tenant session pool: p50/p99 tick latency,
+                      batched-vs-sequential speedup, sessions/device
 
 Output: ``name,us_per_call,derived`` CSV lines on stdout AND a
 machine-readable ``BENCH_<suite>.json`` at the repo root per suite run —
@@ -36,7 +38,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "dynamic_vs_static", "stream", "tc",
                              "merge_policy", "scheduling", "static_baselines",
-                             "pallas", "roofline", "robustness"])
+                             "pallas", "roofline", "robustness", "serve"])
     ap.add_argument("--small", action="store_true", default=True,
                     help="reduced graph sizes (CI-speed; default on CPU)")
     ap.add_argument("--full", dest="small", action="store_false",
@@ -87,6 +89,10 @@ def main() -> None:
         import robustness
         suite("robustness", lambda: robustness.run(small=args.small,
                                                    quick=args.quick))
+    if args.suite in ("all", "serve"):
+        import serve
+        suite("serve", lambda: serve.run(small=args.small,
+                                         quick=args.quick))
 
 
 if __name__ == "__main__":

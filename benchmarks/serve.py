@@ -1,0 +1,117 @@
+"""Serving-pool benchmark: the multi-tenant numbers DESIGN.md §7 quotes.
+
+Three questions, one suite:
+
+* **latency** — p50/p99 per service tick (one ΔG batch per tenant,
+  ingested via ``apply_many``) at several pool sizes;
+* **batched speedup** — the same tick stream with ``batch_mode="vmap"``
+  (one mega-call per round) vs ``"off"`` (N solo applies): the win the
+  batched execution path exists for;
+* **capacity** — resident bytes per session (handle + props), converted
+  to sessions-per-device against a nominal 16 GiB HBM budget.  CPU runs
+  measure the same arrays a TPU run would hold.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+import common
+from common import emit
+
+
+def _tenant_streams(csr, n_tenants, percent=30):
+    from repro.graph.updates import random_updates
+    return [random_updates(csr, percent, seed=1000 + t)
+            for t in range(n_tenants)]
+
+
+def _tick_times(pool, streams, batch_size, ticks):
+    """Wall time per service tick: one batch per tenant, one drain."""
+    names = pool.tenants()
+    out = []
+    for i in range(ticks):
+        reqs = [(nm, streams[j].batch(i % streams[j].num_batches(batch_size),
+                                      batch_size))
+                for j, nm in enumerate(names)]
+        t0 = time.perf_counter()
+        pool.apply_many(reqs)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x,
+            [pool.session(nm)._handle for nm in names])
+        out.append(time.perf_counter() - t0)
+    return np.asarray(out[1:])   # drop the compile tick
+
+
+def _session_bytes(sess) -> int:
+    tree, _ = sess.state_tree()
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def run(small: bool = True, quick: bool = False,
+        backends=("jnp", "pallas"), pool_sizes=(4, 16, 32),
+        batch_size: int = 16, ticks: int = 12) -> None:
+    from repro.core import registry
+    from repro.graph.csr import build_csr, rmat_graph
+    from repro.serve import SessionPool
+
+    if quick:
+        backends = ("jnp",)
+        pool_sizes = (4, 8)
+        ticks = 6
+    n, edges, w = rmat_graph(9 if small else 12, 8, seed=1)
+    keep = edges[:, 0] != edges[:, 1]
+    csr = build_csr(n, edges[keep], w[keep])
+
+    for backend in backends:
+        # interpret-mode pallas pays minutes per sequential tick and its
+        # N-wide vmapped kernels are LLVM-compile heavy: cap the grid
+        sizes = pool_sizes if backend != "pallas" \
+            else tuple(s for s in pool_sizes if s <= 16)[:2]
+        for n_tenants in sizes:
+            times = {}
+            for mode in ("vmap", "off"):
+                registry.clear_shared_engines()
+                pool = SessionPool(backend=backend, batch_mode=mode,
+                                   max_pending=4 * n_tenants)
+                streams = _tenant_streams(csr, n_tenants)
+                for t in range(n_tenants):
+                    pool.bind(f"t{t}", csr)
+                ts = _tick_times(pool, streams, batch_size, ticks)
+                times[mode] = ts
+                p50, p99 = np.percentile(ts, [50, 99])
+                per_sess = np.median(ts) / n_tenants
+                emit(f"serve/{backend}/{mode}/N{n_tenants}",
+                     np.median(ts) * 1e6,
+                     f"p50_ms={p50 * 1e3:.3f};p99_ms={p99 * 1e3:.3f};"
+                     f"per_session_us={per_sess * 1e6:.1f};"
+                     f"tenants={n_tenants};"
+                     f"mega_calls={pool.stats()['mega_calls']}")
+            speedup = float(np.median(times["off"]) /
+                            max(np.median(times["vmap"]), 1e-12))
+            emit(f"serve/{backend}/speedup/N{n_tenants}",
+                 np.median(times["vmap"]) * 1e6,
+                 f"batched_speedup={speedup:.2f};tenants={n_tenants}")
+
+        # capacity: resident bytes per session -> sessions per device
+        registry.clear_shared_engines()
+        pool = SessionPool(backend=backend)
+        streams = _tenant_streams(csr, 1)
+        pool.bind("cap", csr)
+        pool.apply("cap", streams[0].batch(0, batch_size))
+        per = _session_bytes(pool.session("cap"))
+        hbm = 16 * (1 << 30)
+        emit(f"serve/{backend}/capacity", float(per),
+             f"bytes_per_session={per};"
+             f"sessions_per_16GiB={hbm // max(per, 1)};"
+             f"n={csr.n};edges={csr.num_edges}")
+    registry.clear_shared_engines()
+
+
+if __name__ == "__main__":
+    run()
+    common.write_json("serve")

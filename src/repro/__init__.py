@@ -13,11 +13,11 @@ import cycles; heavyweight backends only load when first used.
 """
 
 __all__ = [
-    "api", "compile", "bind_graph", "CompiledProgram", "Session",
+    "api", "serve", "compile", "bind_graph", "CompiledProgram", "Session",
     "GraphSession", "SessionResult", "PropertyView", "register_engine",
-    "available_backends", "restore_session",
+    "available_backends", "restore_session", "SessionPool",
     "AdmissionError", "PoolOverflowError", "KernelFailure",
-    "DivergenceError", "SessionHealth",
+    "DivergenceError", "PoolSaturatedError", "SessionHealth", "PoolHealth",
 ]
 
 _API_NAMES = {"compile", "bind_graph", "CompiledProgram", "Session",
@@ -26,14 +26,27 @@ _API_NAMES = {"compile", "bind_graph", "CompiledProgram", "Session",
               "AdmissionError", "PoolOverflowError", "KernelFailure",
               "DivergenceError", "SessionHealth"}
 
+_SERVE_NAMES = {"SessionPool"}
+
+_RUNTIME_NAMES = {"PoolSaturatedError", "PoolHealth"}
+
 
 def __getattr__(name):
     if name == "api":
         import repro.api as api
         return api
+    if name == "serve":
+        import repro.serve as serve
+        return serve
     if name in _API_NAMES:
         import repro.api as api
         return getattr(api, name)
+    if name in _SERVE_NAMES:
+        import repro.serve as serve
+        return getattr(serve, name)
+    if name in _RUNTIME_NAMES:
+        import repro.runtime as runtime
+        return getattr(runtime, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import functools
 import pathlib
+import threading
 from typing import Any, Callable, Dict, Iterator, Mapping, Optional, Union
 
 import numpy as np
@@ -66,10 +67,21 @@ __all__ = [
 
 _DEFAULT_CAPACITY = 64
 
+# lru_cache's dict ops are GIL-atomic, but a miss is not: two threads
+# binding the same program race compile_source and one result is thrown
+# away — and CompiledProgram identity is the pool's grouping key, so the
+# loser's sessions would land in a different group.  Serialize misses.
+_COMPILE_LOCK = threading.Lock()
+
 
 @functools.lru_cache(maxsize=256)
-def _compile_cached(source_or_path: str, stamp) -> "CompiledProgram":
+def _compile_once(source_or_path: str, stamp) -> "CompiledProgram":
     return CompiledProgram(compile_source(source_or_path))
+
+
+def _compile_cached(source_or_path: str, stamp) -> "CompiledProgram":
+    with _COMPILE_LOCK:
+        return _compile_once(source_or_path, stamp)
 
 
 def compile(source_or_path: str) -> "CompiledProgram":
@@ -85,6 +97,20 @@ def compile(source_or_path: str) -> "CompiledProgram":
     return _compile_cached(s, stamp)
 
 
+def _dedupe_chain(names) -> tuple:
+    """Order-preserving dedupe of a failover candidate list.  A chain
+    like ``(jnp, pallas, jnp)`` (user-supplied, or a custom chain that
+    re-lists the requested backend) used to construct — and on total
+    failure, report — the same backend twice."""
+    seen = set()
+    out = []
+    for name in names:
+        if name not in seen:
+            seen.add(name)
+            out.append(name)
+    return tuple(out)
+
+
 def _make_engine_failover(backend: str, failover, **backend_opts):
     """Instantiate ``backend``; with failover enabled, a factory that
     raises (missing accelerator, import error) falls down the chain at
@@ -93,7 +119,7 @@ def _make_engine_failover(backend: str, failover, **backend_opts):
         return make_engine(backend, **backend_opts), backend
     chain = failover_chain(backend) if failover is True else tuple(failover)
     last = None
-    for name in (backend, *chain):
+    for name in _dedupe_chain((backend, *chain)):
         try:
             # backend_opts are engine-specific (e.g. pallas k=): only
             # the requested backend gets them
@@ -102,8 +128,8 @@ def _make_engine_failover(backend: str, failover, **backend_opts):
         except Exception as e:       # noqa: BLE001 — bind-time failover
             last = e
     raise KernelFailure(
-        f"no backend in {(backend, *chain)} could be constructed",
-        backend=backend, cause=last)
+        f"no backend in {_dedupe_chain((backend, *chain))} could be "
+        f"constructed", backend=backend, cause=last)
 
 
 def _post_bind_failover(sess: "GraphSession", requested: str, bound: str,
@@ -112,7 +138,8 @@ def _post_bind_failover(sess: "GraphSession", requested: str, bound: str,
     failed and a fallback was bound instead)."""
     if bound == requested or not failover:
         return
-    chain = failover_chain(requested) if failover is True else tuple(failover)
+    chain = failover_chain(requested) if failover is True \
+        else _dedupe_chain(failover)
     sess._failover = FailoverPolicy(requested, chain)
     sess._failover.degraded_from()
     sess._health.preferred_backend = requested
@@ -148,9 +175,15 @@ def _auto_capacity(stream: Optional[UpdateStream] = None,
     land in the pool (deletes only tombstone), doubled for headroom.
     With neither in sight — arming a Batch loop prepares the graph for
     the prologue before any update exists — the pool starts at the
-    default.  The grow-on-overflow path backstops all underestimates."""
+    default.  The grow-on-overflow path backstops all underestimates.
+
+    Every path floors at ``_DEFAULT_CAPACITY``: the stream path used to
+    floor at 16, so tiny streams (e.g. a 4-add probe stream) prepared a
+    pool 4x smaller than an armed session's, and the first real batch
+    paid a grow-merge-replay an identically-bound armed session never
+    saw."""
     if stream is not None:
-        return max(16, 2 * stream.num_adds)
+        return max(_DEFAULT_CAPACITY, 2 * stream.num_adds)
     if batch is not None:
         return max(_DEFAULT_CAPACITY, 8 * batch.size)
     return _DEFAULT_CAPACITY
@@ -290,7 +323,7 @@ class GraphSession:
         self._health.dead_letter = self._guard.buffer
         if failover:
             chain = failover_chain(self._backend_name) if failover is True \
-                else tuple(failover)
+                else _dedupe_chain(failover)
             self._failover: Optional[FailoverPolicy] = FailoverPolicy(
                 self._backend_name, chain)
         else:
@@ -526,12 +559,24 @@ class GraphSession:
         """Apply one ΔG batch structurally (deletes then adds), after
         admission (reject/clamp/quarantine — see ``bind_graph``), growing
         the diff pool and replaying on overflow."""
+        admitted = self._admit_for_apply(batch)
+        if admitted is not None:
+            self._apply_admitted(admitted)
+        return self
+
+    def _admit_for_apply(self, batch: UpdateBatch) -> Optional[UpdateBatch]:
+        """The admission half of :meth:`apply`: guard the batch and do
+        the quarantine/empty-skip cursor bookkeeping.  Returns the
+        admitted batch, or None when the batch was consumed without
+        device work.  Split out so the serving pool admits on its own
+        thread and executes through the batched path while staying on
+        the exact code (and health accounting) a solo ``apply`` uses."""
         self._ensure_prepared(batch=batch)
         admitted = self._guard.admit(batch, self._n_vertices(),
                                      cursor=self._cursor)
         if admitted is None:           # quarantined: consumed, not applied
             self._cursor += 1
-            return self
+            return None
         if self._guard.policy != "off" and not (
                 np.asarray(admitted.add_mask).any()
                 or np.asarray(admitted.del_mask).any()):
@@ -540,7 +585,12 @@ class GraphSession:
             # armed path runs every batch body for one-shot bit-equality)
             self._health.empty_skipped += 1
             self._cursor += 1
-            return self
+            return None
+        return admitted
+
+    def _apply_admitted(self, admitted: UpdateBatch) -> None:
+        """The execution half of :meth:`apply`: deletes-then-adds under
+        the failover guard with the bounded grow-and-replay backstop."""
 
         def work():
             base = self._handle
@@ -561,7 +611,6 @@ class GraphSession:
 
         self._guarded(work)
         self._cursor += 1
-        return self
 
     # -- hand-staged drivers -------------------------------------------------
     def call(self, fn: Callable, *args, **kwargs):
@@ -1150,6 +1199,7 @@ class CompiledProgram:
 
 def restore_session(ckpt_dir, backend: Optional[str] = None,
                     step: Optional[int] = None,
+                    engine: Optional[Engine] = None,
                     **backend_opts) -> GraphSession:
     """Reconstruct a session from a checkpoint directory written by
     ``Session.save`` / ``GraphSession.save``.
@@ -1171,6 +1221,14 @@ def restore_session(ckpt_dir, backend: Optional[str] = None,
     not re-run.  The result is a :class:`Session` when the checkpoint
     was written by one (program source travels in the manifest),
     otherwise a :class:`GraphSession`.
+
+    ``engine=`` restores onto an ALREADY-CONSTRUCTED engine instance
+    instead of building a fresh one (mutually exclusive with
+    ``backend``/``backend_opts``).  The serving pool revives evicted
+    sessions this way so they rejoin the pool's shared-executable
+    engine — a fresh engine would recompile everything and break the
+    pool's batching groups.  Bit-exactness then requires the instance's
+    ``state_kind`` to match the saver's, same as a name-based restore.
     """
     if step is None:
         step = ckpt.latest_step(ckpt_dir)
@@ -1178,7 +1236,12 @@ def restore_session(ckpt_dir, backend: Optional[str] = None,
             raise FileNotFoundError(
                 f"no committed checkpoint under {ckpt_dir}")
     meta = ckpt.read_manifest(ckpt_dir, step)["extra"]
-    engine = make_engine(backend or meta["backend"], **backend_opts)
+    if engine is not None:
+        if backend is not None or backend_opts:
+            raise ValueError("restore_session: pass either engine= or "
+                             "backend=/**backend_opts, not both")
+    else:
+        engine = make_engine(backend or meta["backend"], **backend_opts)
     example = _example_from_spec(meta["tree_spec"])
     tree, _ = ckpt.restore(ckpt_dir, step, example)
     # strip the restore's single-device commitment: the engine re-places

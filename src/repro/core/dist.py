@@ -51,7 +51,7 @@ def shard_map(fn, *, mesh, in_specs, out_specs, check_vma=False, **kw):
 
 from repro.core.ir import EdgeSweep, Reduce, trace_read_set
 from repro.core.engine import Engine, Collectives, Props, WedgeCtx, \
-    edge_lane_flags
+    edge_lane_flags, _STREAM_CACHE_LOCK
 from repro.graph.csr import CSR, INT, build_csr
 from repro.graph import diffcsr
 from repro.graph.diffcsr import DynGraph, BOOL
@@ -389,37 +389,38 @@ class DistEngine(Engine):
 
     def _segment_runner(self, step_fn, dg: DistGraph, batch_size: int):
         key = (step_fn, self._handle_shape_key(dg), batch_size)
-        fn = self._stream_cache.get(key)
-        if fn is None:
-            view = _DistStreamView(self)
-            ax = self.axis
+        with _STREAM_CACHE_LOCK:
+            fn = self._stream_cache.get(key)
+            if fn is None:
+                view = _DistStreamView(self)
+                ax = self.axis
 
-            def seg_run(dgl, c0, batches):
-                g = _local(dgl)
+                def seg_run(dgl, c0, batches):
+                    g = _local(dgl)
 
-                def body(state, batch):
-                    g, c = step_fn(view, state[0], batch, state[1])
-                    return (g, c), None
+                    def body(state, batch):
+                        g, c = step_fn(view, state[0], batch, state[1])
+                        return (g, c), None
 
-                (g, c), _ = jax.lax.scan(body, (g, c0), batches)
-                # reduce the per-shard counters to the driver's triple:
-                # overflow summed, occupancy as the worst shard
-                cnt = diffcsr.pool_counters(g)
-                cnt = jnp.stack([jax.lax.psum(cnt[0], ax),
-                                 jax.lax.pmax(cnt[1], ax),
-                                 jax.lax.pmax(cnt[2], ax)])
-                return _restack(g), c, cnt[None]
+                    (g, c), _ = jax.lax.scan(body, (g, c0), batches)
+                    # reduce the per-shard counters to the driver's triple:
+                    # overflow summed, occupancy as the worst shard
+                    cnt = diffcsr.pool_counters(g)
+                    cnt = jnp.stack([jax.lax.psum(cnt[0], ax),
+                                     jax.lax.pmax(cnt[1], ax),
+                                     jax.lax.pmax(cnt[2], ax)])
+                    return _restack(g), c, cnt[None]
 
-            shmapped = jax.jit(self._shmap(
-                seg_run,
-                in_specs=(self._gspec(), self._pspec(), P()),
-                out_specs=(self._gspec(), self._pspec(), P(self.axis))))
+                shmapped = jax.jit(self._shmap(
+                    seg_run,
+                    in_specs=(self._gspec(), self._pspec(), P()),
+                    out_specs=(self._gspec(), self._pspec(), P(self.axis))))
 
-            def fn(dg, carry, stacked):
-                dg, carry, counters = shmapped(dg, carry, stacked)
-                return dg, carry, counters[0]
+                def fn(dg, carry, stacked):
+                    dg, carry, counters = shmapped(dg, carry, stacked)
+                    return dg, carry, counters[0]
 
-            self._stream_cache[key] = fn
+                self._stream_cache[key] = fn
         return fn
 
     def run_stream(self, dg: DistGraph, stream, batch_size: int, step_fn,

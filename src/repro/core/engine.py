@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -30,6 +31,15 @@ from repro.graph.updates import UpdateBatch
 from repro.runtime import faults as _faults
 
 Props = Dict[str, jax.Array]
+
+# Guards every engine's per-instance ``_stream_cache`` (compiled stream
+# executables): a session pool applies batches from worker threads, and
+# an unguarded dict get/compile/set races into duplicate compilations —
+# or, interleaved with ``grow``'s eviction sweep, a RuntimeError from
+# mutating the dict mid-iteration.  One process-wide lock (not
+# per-instance) keeps lazy lock creation itself race-free; the critical
+# sections are dict ops only, so contention is negligible.
+_STREAM_CACHE_LOCK = threading.Lock()
 
 
 class Collectives:
@@ -247,8 +257,9 @@ class Engine:
         embed the shape key as a top-level tuple element."""
         cache = getattr(self, "_stream_cache", None)
         if cache:
-            for k in [k for k in cache if shape_key in k]:
-                del cache[k]
+            with _STREAM_CACHE_LOCK:
+                for k in [k for k in cache if shape_key in k]:
+                    cache.pop(k, None)
 
     def _segment_runner(self, step_fn, handle, batch_size: int):
         """Compiled ``(handle, carry, stacked_batches) -> (handle, carry,
@@ -603,20 +614,21 @@ class JnpEngine(Engine):
         aval cache would otherwise keep one per capacity step alive
         forever — PR 5 debt #1)."""
         key = (step_fn, bounds, shape_key, batch_size)
-        fn = self._stream_cache.get(key)
-        if fn is None:
-            view = self.stream_view(bounds)
+        with _STREAM_CACHE_LOCK:
+            fn = self._stream_cache.get(key)
+            if fn is None:
+                view = self.stream_view(bounds)
 
-            def seg_run(handle, carry, batches):
-                def body(state, batch):
-                    h, c = step_fn(view, state[0], batch, state[1])
-                    return (h, c), None
+                def seg_run(handle, carry, batches):
+                    def body(state, batch):
+                        h, c = step_fn(view, state[0], batch, state[1])
+                        return (h, c), None
 
-                (h, c), _ = jax.lax.scan(body, (handle, carry), batches)
-                return h, c, self.handle_counters(h)
+                    (h, c), _ = jax.lax.scan(body, (handle, carry), batches)
+                    return h, c, self.handle_counters(h)
 
-            fn = jax.jit(seg_run)
-            self._stream_cache[key] = fn
+                fn = jax.jit(seg_run)  # wraps only; tracing is deferred
+                self._stream_cache[key] = fn
         return fn
 
     def _segment_runner(self, step_fn, handle, batch_size: int):

@@ -17,7 +17,8 @@ binds ``backend="dist"``.
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, List
+import threading
+from typing import Any, Callable, Dict, List, Tuple
 
 from repro.core.engine import Engine
 
@@ -97,6 +98,46 @@ def make_engine(name: str, **options) -> Engine:
 def available_backends() -> List[str]:
     """Sorted names of every registered backend."""
     return sorted(set(_BUILTIN_PATHS) | set(_FACTORIES))
+
+
+# ---------------------------------------------------------------------------
+# Shared-executable binding (repro.serve)
+# ---------------------------------------------------------------------------
+# Compiled executables (jitted scatter programs, stream-segment scans,
+# staged DSL lowerings) live on the *engine instance*: two sessions
+# bound through ``make_engine`` each pay their own compilations even
+# when their programs and shapes are identical.  A session pool instead
+# binds all same-shape tenants to ONE engine per (backend, scope,
+# options), so the first tenant's compile warms every later tenant.
+#
+# Engines keep per-graph host state (``_n`` is set by ``prepare``), so
+# the shared key MUST scope by anything that state depends on — the
+# pool passes the graph's vertex count as ``scope``.  Sharing is safe
+# exactly when every session on the instance would set identical host
+# state; sessions with different n need different shared instances.
+
+_SHARED_ENGINES: Dict[Tuple, Engine] = {}
+_SHARED_LOCK = threading.Lock()
+
+
+def shared_engine(name: str, scope: Any = None, **options) -> Engine:
+    """One cached engine instance per ``(name, scope, options)`` — the
+    pool's shared-executable binding.  ``scope`` must capture whatever
+    per-graph host state the engine carries (vertex count at minimum);
+    callers that cannot guarantee a safe scope should use
+    :func:`make_engine` and pay the per-session compiles."""
+    key = (name, scope, tuple(sorted(options.items())))
+    with _SHARED_LOCK:
+        eng = _SHARED_ENGINES.get(key)
+        if eng is None:
+            eng = _SHARED_ENGINES[key] = make_engine(name, **options)
+        return eng
+
+
+def clear_shared_engines() -> None:
+    """Drop every shared engine (tests; frees their compiled caches)."""
+    with _SHARED_LOCK:
+        _SHARED_ENGINES.clear()
 
 
 # Degradation order per backend: where a session falls when its bound

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -235,23 +236,30 @@ class RepairConfig:
 
 
 _TUNE_CACHE: dict = {}
+# Pool workers race bind-time tuning for one shape; under measure=True a
+# duplicate tuning is not just wasted compiles but a nondeterministic
+# winner (timing noise picks the config).  The lock makes the first
+# tuner authoritative.
+_TUNE_LOCK = threading.Lock()
 _ROW_CANDIDATES = (512, 256, 128)
 _MERGE_CANDIDATES = (256, 128)
 
 
 def clear_tune_cache() -> None:
-    _TUNE_CACHE.clear()
+    with _TUNE_LOCK:
+        _TUNE_CACHE.clear()
 
 
 def repair_config(n: int, e_cap: int, k: int, *, measure: bool = False,
                   interpret: bool = True) -> RepairConfig:
     """Block config for a handle shape; one tuning per (N, E_cap, K)."""
     key = (int(n), int(e_cap), int(k))
-    cfg = _TUNE_CACHE.get(key)
-    if cfg is None:
-        cfg = (_measure_config(*key, interpret=interpret) if measure
-               else _heuristic_config(*key))
-        _TUNE_CACHE[key] = cfg
+    with _TUNE_LOCK:
+        cfg = _TUNE_CACHE.get(key)
+        if cfg is None:
+            cfg = (_measure_config(*key, interpret=interpret) if measure
+                   else _heuristic_config(*key))
+            _TUNE_CACHE[key] = cfg
     return cfg
 
 

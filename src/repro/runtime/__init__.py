@@ -25,19 +25,20 @@ grow / failover counters, last error, current backend).
 """
 from repro.runtime.errors import (RuntimeFault, AdmissionError,
                                   PoolOverflowError, KernelFailure,
-                                  CheckpointCorrupt, DivergenceError)
+                                  CheckpointCorrupt, DivergenceError,
+                                  PoolSaturatedError)
 from repro.runtime.admission import (AdmissionGuard, DeadLetterBuffer,
                                      QuarantineRecord, Violation,
                                      ADMISSION_POLICIES)
-from repro.runtime.health import SessionHealth
+from repro.runtime.health import SessionHealth, PoolHealth
 from repro.runtime.failover import FailoverPolicy, backoff_delay
 from repro.runtime import faults
 from repro.runtime import watchdog
 
 __all__ = [
     "RuntimeFault", "AdmissionError", "PoolOverflowError", "KernelFailure",
-    "CheckpointCorrupt", "DivergenceError",
+    "CheckpointCorrupt", "DivergenceError", "PoolSaturatedError",
     "AdmissionGuard", "DeadLetterBuffer", "QuarantineRecord", "Violation",
-    "ADMISSION_POLICIES", "SessionHealth", "FailoverPolicy",
+    "ADMISSION_POLICIES", "SessionHealth", "PoolHealth", "FailoverPolicy",
     "backoff_delay", "faults", "watchdog",
 ]

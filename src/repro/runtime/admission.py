@@ -50,6 +50,9 @@ _CLAMPABLE = {
     "weight_invalid": True,
     "add_del_conflict": True,    # no-op under clamp: ordering is defined
     "batch_oversized": False,
+    # pool-level finding: a queued request dropped under the shed
+    # policy (repro.serve); never clampable — the batch was not applied
+    "pool_saturated": False,
 }
 
 

@@ -103,6 +103,32 @@ class CheckpointCorrupt(RuntimeFault):
         return d
 
 
+class PoolSaturatedError(RuntimeFault):
+    """The session pool's bounded request queue is full and the overload
+    policy is ``reject``: the submit was refused before touching any
+    session state.  Carries the queue shape at refusal time so a client
+    (or load balancer) can back off per tenant instead of parsing
+    strings."""
+
+    def __init__(self, message: str, tenant: Optional[str] = None,
+                 pending: int = 0, max_pending: int = 0,
+                 policy: str = "reject",
+                 depths: Optional[Dict[str, int]] = None):
+        super().__init__(message)
+        self.tenant = tenant
+        self.pending = int(pending)
+        self.max_pending = int(max_pending)
+        self.policy = policy
+        self.depths = dict(depths or {})
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        d.update(tenant=self.tenant, pending=self.pending,
+                 max_pending=self.max_pending, policy=self.policy,
+                 depths=dict(self.depths))
+        return d
+
+
 class DivergenceError(RuntimeFault):
     """The on-device divergence probe found NaN/Inf in a property array
     after a stream segment — numerically diverged state that would

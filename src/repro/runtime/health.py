@@ -62,3 +62,34 @@ class SessionHealth:
         else:
             d["dead_letter"] = None
         return d
+
+
+@dataclasses.dataclass
+class PoolHealth:
+    """Pool-level counters, one per :class:`repro.serve.SessionPool`.
+
+    Per-tenant fault counters stay in each session's
+    :class:`SessionHealth`; this layer tracks what only the pool can
+    see — queueing, batching, eviction, and shed/reject pressure.
+    Mutated under the pool's lock (the pool's request queue IS
+    multi-threaded, unlike single sessions)."""
+
+    tenants: int = 0             # tenants ever bound (live + evicted)
+    resident: int = 0            # sessions currently holding device state
+    # request flow
+    submitted: int = 0           # requests accepted into the queue
+    applied: int = 0             # ΔG batches executed (any path)
+    rejected: int = 0            # submits refused (reject policy)
+    shed: int = 0                # queued requests dropped (shed policy)
+    queue_peak: int = 0          # high-water mark of pending requests
+    # batching
+    mega_calls: int = 0          # batched multi-graph launches
+    mega_sessions: int = 0       # sessions served by those launches
+    sequential_fallbacks: int = 0  # armed/singleton/overflow per-session runs
+    # eviction
+    evictions: int = 0           # sessions spilled via Session.save
+    restores: int = 0            # lazy restore_session revivals
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}

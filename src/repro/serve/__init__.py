@@ -1,0 +1,17 @@
+"""repro.serve — the multi-tenant serving layer (DESIGN.md §7).
+
+One process, one compiled program per backend, thousands of live graph
+sessions: :class:`SessionPool` multiplexes independent tenants over
+shared engine executables, batches same-shape ΔG applies into single
+vmapped mega-calls (bit-exact vs solo ``apply``), bounds its request
+queue with typed backpressure, and spills idle sessions to disk through
+the PR 7 durability path.
+"""
+from repro.serve.batch import (BATCH_MODES, MegaBatcher, group_key,
+                               next_pow2, tree_index, tree_stack)
+from repro.serve.pool import OVERLOAD_POLICIES, SessionPool
+
+__all__ = [
+    "SessionPool", "MegaBatcher", "group_key", "tree_stack", "tree_index",
+    "next_pow2", "BATCH_MODES", "OVERLOAD_POLICIES",
+]

@@ -1,0 +1,123 @@
+"""The batched multi-graph execution path: N sessions, one launch.
+
+A pool of same-shape sessions is, to XLA, one stacked pytree: every
+handle leaf gains a leading session axis and ONE vmapped (or scanned)
+program applies every tenant's ΔG batch in a single device call.  The
+per-tenant semantics are untouched — ``vmap`` runs the exact
+deletes-then-adds program :meth:`GraphSession.apply` runs, just over a
+batch axis — so the contract this module is tested against is
+**bit-exactness**: a mega-call must produce the same handle bits as N
+sequential solo applies.
+
+Two costs are managed here:
+
+* **compile count** — groups are padded up to the next power-of-two
+  bucket (the stream executor's padding trick, applied across sessions
+  instead of across lanes), so a pool whose group sizes wander between
+  drains compiles O(log N) programs, not one per size;
+* **host syncs** — the pool-overflow counters for the whole group come
+  back as one stacked ``(bucket, 3)`` array, read back in ONE host
+  sync, preserving the one-sync-per-apply budget of the solo path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+BATCH_MODES = ("vmap", "scan", "off")
+
+
+def tree_stack(trees: List[Any]):
+    """Stack a list of same-shape pytrees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_index(tree: Any, i: int):
+    """Slice one element back out of a stacked pytree."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def group_key(engine, handle, batch) -> Tuple:
+    """What must match for sessions to share one mega-call: the engine
+    instance (its program AND its host-side padding state), the handle's
+    tree structure and every leaf's shape/dtype (stackability), and the
+    ΔG batch's lane width."""
+    leaves, treedef = jax.tree_util.tree_flatten(handle)
+    return (id(engine), treedef,
+            tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
+            batch.size)
+
+
+class MegaBatcher:
+    """Owns the jitted mega-call runners, one per ``(engine, mode)``.
+
+    ``mode="vmap"`` vectorizes across sessions (one fused launch);
+    ``"scan"`` runs them as a compiled sequential loop (no batch-axis
+    memory amplification — the fallback for groups too large to hold
+    stacked); ``"off"`` is handled by the pool (never calls here).
+    jit's own shape cache specializes each runner per (leaf shapes,
+    bucket), so this layer only caches the python closure.
+    """
+
+    def __init__(self, mode: str = "vmap"):
+        if mode not in BATCH_MODES:
+            raise ValueError(f"batch_mode must be one of {BATCH_MODES}, "
+                             f"got {mode!r}")
+        self.mode = mode
+        self._runners: Dict[Tuple[int, str], Any] = {}
+
+    def _runner(self, engine):
+        """The whole mega-call — session stacking, the vectorized
+        del+add program, and per-session unstacking — is ONE jitted
+        function over a tuple of handles, so a drain round costs one
+        dispatch regardless of group size.  Stacking eagerly instead
+        (jnp.stack per leaf, then x[i] per session to unstack) costs
+        ~2·bucket·leaves tiny device calls per round, which on small
+        graphs swamps the fused launch it was supposed to amortize."""
+        key = (id(engine), self.mode)
+        fn = self._runners.get(key)
+        if fn is not None:
+            return fn
+
+        def one(h, b):
+            h = engine.update_del(h, b)
+            h = engine.update_add(h, b)
+            return h, engine.handle_counters(h)
+
+        def mega(hs, bs):
+            sh, sb = tree_stack(list(hs)), tree_stack(list(bs))
+            if self.mode == "vmap":
+                out_h, out_c = jax.vmap(one)(sh, sb)
+            else:  # scan: compiled sequential loop, no batch-axis
+                   # memory amplification
+                def body(_, hb):
+                    return None, one(*hb)
+                _, (out_h, out_c) = jax.lax.scan(body, None, (sh, sb))
+            return tuple(tree_index(out_h, i)
+                         for i in range(len(hs))), out_c
+
+        fn = self._runners[key] = jax.jit(mega)
+        return fn
+
+    def run(self, engine, handles: List[Any], batches: List[Any]
+            ) -> Tuple[List[Any], np.ndarray]:
+        """Apply ``batches[i]`` to ``handles[i]`` for all i in ONE
+        compiled launch.  Returns the new handles and the host-side
+        ``(len(handles), 3)`` pool-counter array — the single sync.
+        Pad slots (group size up to the bucket) replay slot 0 and are
+        dropped before returning; the jit cache specializes one program
+        per (leaf shapes, bucket), so compile count stays logarithmic
+        in the largest group ever drained."""
+        real = len(handles)
+        bucket = next_pow2(real)
+        hs = tuple(handles) + (handles[0],) * (bucket - real)
+        bs = tuple(batches) + (batches[0],) * (bucket - real)
+        out_h, out_c = self._runner(engine)(hs, bs)
+        return list(out_h[:real]), np.asarray(out_c)[:real]

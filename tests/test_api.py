@@ -185,6 +185,25 @@ def test_capacity_auto_sizes_from_stream():
     np.testing.assert_array_equal(_as_oracle(res.props["dist"]), ref)
 
 
+def test_capacity_auto_floors_at_default():
+    """Every ``capacity='auto'`` path floors at the same default.  The
+    stream path used to floor at 16, so a tiny probe stream prepared a
+    pool 4x smaller than an identically-bound armed session's and paid a
+    grow-merge-replay on its first real batch."""
+    from repro.api import _auto_capacity, _DEFAULT_CAPACITY
+    from repro.graph.updates import UpdateStream
+    tiny = UpdateStream(adds=np.asarray([(0, 1, 5)], dtype=np.int64),
+                        dels=np.zeros((0, 2), dtype=np.int64))
+    assert _auto_capacity(stream=tiny) == _DEFAULT_CAPACITY
+    assert _auto_capacity(batch=tiny.batch(0, 2)) == _DEFAULT_CAPACITY
+    assert _auto_capacity() == _DEFAULT_CAPACITY
+    # and the floor still yields to real demand
+    big = UpdateStream(
+        adds=np.asarray([(0, 1, 5)] * 100, dtype=np.int64),
+        dels=np.zeros((0, 2), dtype=np.int64))
+    assert _auto_capacity(stream=big) == 2 * big.num_adds
+
+
 def test_capacity_overflow_grows_and_replays():
     """An undersized pool must not drop adds: the armed apply path rolls
     back, grows, and replays — final state stays oracle-exact."""

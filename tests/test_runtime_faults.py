@@ -220,6 +220,45 @@ def test_chain_exhausted_raises_kernel_failure():
     assert sess.health.kernel_failures >= 2
 
 
+def test_bind_failover_chain_dedupes_order_preserving():
+    """A chain that re-lists backends (user-supplied, or a custom chain
+    that repeats the requested backend) must try each backend at most
+    once, in first-seen order.  The old bind path walked duplicates:
+    a failing factory was constructed once per listing, and the
+    total-failure report named the same backend twice."""
+    from repro.core import registry
+    calls = []
+
+    def flaky_factory(**kw):
+        calls.append("flaky_dup")
+        raise RuntimeError("accelerator missing")
+
+    registry.register_engine("flaky_dup", flaky_factory, overwrite=True)
+    try:
+        csr = _graph()
+        sess = api.bind_graph(
+            csr, backend="flaky_dup",
+            failover=("flaky_dup", "jnp", "flaky_dup", "jnp"))
+        assert sess.backend_name == "jnp"
+        assert calls == ["flaky_dup"]      # constructed exactly once
+        # degradation was recorded against the deduped chain
+        assert sess.health.preferred_backend == "flaky_dup"
+
+        calls.clear()
+        with pytest.raises(KernelFailure) as ei:
+            api.bind_graph(csr, backend="flaky_dup",
+                           failover=("flaky_dup", "flaky_dup"))
+        assert calls == ["flaky_dup"]
+        assert str(ei.value).count("flaky_dup") == 1   # reported once
+    finally:
+        registry.unregister_engine("flaky_dup")
+
+
+def test_dedupe_chain_order_preserving():
+    assert api._dedupe_chain(("a", "b", "a", "c", "b")) == ("a", "b", "c")
+    assert api._dedupe_chain(()) == ()
+
+
 def test_armed_session_failover_preserves_loop():
     """The armed DSL Batch loop must survive a mid-stream backend hop:
     the paused frame is re-staged on the survivor and the final dist is

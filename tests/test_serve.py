@@ -1,0 +1,408 @@
+"""Session-pool suite (DESIGN.md §7): the serving contract.
+
+The load-bearing guarantee is **bit-exactness** — a pooled tenant's
+state after any mix of mega-calls, sequential fallbacks, evictions and
+restores must equal, bit for bit, a solo session fed the same batches.
+Everything else (backpressure, fairness, thread safety, health
+accounting) is checked against its typed surface.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.api as api
+from repro.core import registry
+from repro.dsl_programs import path as program_path
+from repro.graph import build_csr, random_updates
+from repro.graph.updates import UpdateStream
+from repro.runtime import PoolSaturatedError
+from repro.serve import SessionPool, next_pow2
+from conftest import random_digraph
+
+FAST_BACKENDS = ("jnp", "pallas", "frontier")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_shared_engines():
+    registry.clear_shared_engines()
+    yield
+    registry.clear_shared_engines()
+
+
+def _graph(n=48, seed=3):
+    _, csr, _, _ = random_digraph(n=n, seed=seed)
+    return csr
+
+
+def _state_bits(sess):
+    tree, _ = sess._engine.pack_state(sess._handle)
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_same_state(pooled, solo, ctx=""):
+    fa, fb = _state_bits(pooled), _state_bits(solo)
+    assert len(fa) == len(fb), ctx
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(x, y, err_msg=ctx)
+    assert pooled.stream_cursor == solo.stream_cursor, ctx
+
+
+# ---------------------------------------------------------------------------
+# batched mega-call == sequential solo applies, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", FAST_BACKENDS)
+@pytest.mark.parametrize("mode", ("vmap", "scan"))
+def test_mega_call_bit_exact_vs_solo(backend, mode):
+    csr = _graph()
+    pool = SessionPool(backend=backend, batch_mode=mode)
+    streams = {}
+    for t in range(5):        # 5 tenants: bucket pads 5 -> 8
+        pool.bind(f"t{t}", csr)
+        streams[f"t{t}"] = random_updates(csr, 30, seed=t)
+    for i in range(2):
+        pool.apply_many([(nm, s.batch(i, 8)) for nm, s in streams.items()])
+    assert pool.health.mega_calls >= 2
+    assert pool.health.mega_sessions == 10
+    for nm, s in streams.items():
+        solo = api.bind_graph(csr, backend=backend)
+        for i in range(2):
+            solo.apply(s.batch(i, 8))
+        _assert_same_state(pool.session(nm), solo,
+                           ctx=f"{backend}/{mode}/{nm}")
+
+
+def test_batch_mode_off_is_solo_path():
+    csr = _graph()
+    pool = SessionPool(backend="jnp", batch_mode="off")
+    for t in range(3):
+        pool.bind(f"t{t}", csr)
+    s = random_updates(csr, 20, seed=0)
+    pool.apply_many([(f"t{t}", s.batch(0, 8)) for t in range(3)])
+    assert pool.health.mega_calls == 0
+    assert pool.health.sequential_fallbacks == 3
+
+
+def test_mixed_shapes_group_separately():
+    """Tenants on different graph scales can't stack — each scale forms
+    its own group (and its own shared engine), both still correct."""
+    csr_a, csr_b = _graph(n=48), _graph(n=32, seed=7)
+    pool = SessionPool(backend="jnp")
+    pool.bind("a0", csr_a); pool.bind("a1", csr_a)
+    pool.bind("b0", csr_b); pool.bind("b1", csr_b)
+    sa = random_updates(csr_a, 25, seed=1)
+    sb = random_updates(csr_b, 25, seed=2)
+    pool.apply_many([("a0", sa.batch(0, 8)), ("a1", sa.batch(0, 8)),
+                     ("b0", sb.batch(0, 8)), ("b1", sb.batch(0, 8))])
+    assert pool.health.mega_calls == 2        # one per scale
+    assert pool.session("a0")._engine is pool.session("a1")._engine
+    assert pool.session("b0")._engine is pool.session("b1")._engine
+    assert pool.session("a0")._engine is not pool.session("b0")._engine
+    for nm, csr, st in (("a0", csr_a, sa), ("b1", csr_b, sb)):
+        solo = api.bind_graph(csr, backend="jnp")
+        solo.apply(st.batch(0, 8))
+        _assert_same_state(pool.session(nm), solo, ctx=nm)
+
+
+def test_mega_overflow_falls_back_per_session():
+    """A tenant whose diff pool overflows inside the mega-call must
+    discard its slot and replay through grow-and-replay — no dropped
+    adds, other tenants unaffected, all still solo-exact."""
+    csr = _graph()
+    stream = random_updates(csr, 60, seed=5)
+    width = max(stream.num_adds, stream.num_dels)
+    big = stream.batch(0, width)
+    # cold's tiny Δ padded to the same lane width so both sessions
+    # stack into one mega-call group
+    cold_b = random_updates(csr, 2, seed=6).batch(0, width)
+    pool = SessionPool(backend="jnp")
+    pool.bind("hot", csr, capacity=4)      # guaranteed to overflow
+    pool.bind("cold", csr, capacity=4)
+    pool.apply_many([("hot", big), ("cold", cold_b)])
+    assert pool.session("hot").health.pool_grows >= 1
+    solo_hot = api.bind_graph(csr, backend="jnp", capacity=4)
+    solo_hot.apply(big)
+    _assert_same_state(pool.session("hot"), solo_hot, ctx="hot")
+    solo_cold = api.bind_graph(csr, backend="jnp", capacity=4)
+    solo_cold.apply(cold_b)
+    _assert_same_state(pool.session("cold"), solo_cold, ctx="cold")
+
+
+# ---------------------------------------------------------------------------
+# eviction -> restore transparency
+# ---------------------------------------------------------------------------
+
+def test_eviction_restore_transparent(tmp_path):
+    csr = _graph()
+    pool = SessionPool(backend="jnp", max_resident=2,
+                       spill_dir=str(tmp_path))
+    streams = {}
+    for t in range(4):
+        pool.bind(f"t{t}", csr)
+        streams[f"t{t}"] = random_updates(csr, 25, seed=10 + t)
+    assert pool.stats()["resident"] == 2
+    for i in range(2):
+        pool.apply_many([(nm, s.batch(i, 8)) for nm, s in streams.items()])
+    assert pool.health.evictions > 0 and pool.health.restores > 0
+    for nm, s in streams.items():
+        solo = api.bind_graph(csr, backend="jnp")
+        for i in range(2):
+            solo.apply(s.batch(i, 8))
+        _assert_same_state(pool.session(nm), solo, ctx=nm)
+
+
+def test_restored_tenant_shares_pool_engine(tmp_path):
+    csr = _graph()
+    pool = SessionPool(backend="jnp", spill_dir=str(tmp_path))
+    pool.bind("a", csr)
+    pool.bind("b", csr)
+    pool.apply("a", random_updates(csr, 20, seed=0).batch(0, 8))
+    pool.evict("a")
+    assert "a" in pool.stats()["evicted"]
+    revived = pool.session("a")            # transparent restore
+    assert revived._engine is pool.session("b")._engine
+    assert pool.health.restores == 1
+
+
+def test_evicted_armed_session_resumes_mid_batch_loop(tmp_path):
+    """The ISSUE's hardest lifecycle cell: an ARMED DSL session is
+    idle-evicted mid-Batch-loop and must resume exactly where it
+    paused — identical dist and cursor vs an uninterrupted twin."""
+    csr = _graph()
+    prog = api.compile(program_path("sssp"))
+    stream = random_updates(csr, 30, seed=3)
+    batches = list(stream.batches(8))
+
+    pool = SessionPool(prog, backend="jnp", spill_dir=str(tmp_path))
+    sess = pool.bind("t", csr)
+    sess.run("DynSSSP", batchSize=8, src=0)           # arm
+    for b in batches[: len(batches) // 2]:
+        pool.apply("t", b)
+    pool.evict("t")
+    for b in batches[len(batches) // 2:]:
+        pool.apply("t", b)                # restores transparently
+    revived = pool.session("t")
+    assert revived.armed
+
+    solo = prog.bind(csr, backend="jnp")
+    solo.run("DynSSSP", batchSize=8, src=0)
+    for b in batches:
+        solo.apply(b)
+    np.testing.assert_array_equal(
+        np.asarray(revived.props["dist"]), np.asarray(solo.props["dist"]))
+    assert revived.stream_cursor == solo.stream_cursor
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_reject_raises_typed_with_machine_readable_detail():
+    csr = _graph()
+    pool = SessionPool(backend="jnp", max_pending=2, overload="reject")
+    pool.bind("a", csr)
+    pool.bind("b", csr)
+    s = random_updates(csr, 20, seed=1)
+    pool.submit("a", s.batch(0, 8))
+    pool.submit("b", s.batch(0, 8))
+    with pytest.raises(PoolSaturatedError) as ei:
+        pool.submit("a", s.batch(1, 8))
+    d = ei.value.describe()
+    assert d["kind"] == "PoolSaturatedError"
+    assert d["tenant"] == "a" and d["policy"] == "reject"
+    assert d["pending"] == 2 and d["max_pending"] == 2
+    assert d["depths"] == {"a": 1, "b": 1}
+    assert pool.health.rejected == 1
+    assert pool.pending() == 2            # refused submit touched nothing
+    pool.drain()
+    pool.submit("a", s.batch(1, 8))       # room again after drain
+
+
+def test_shed_drops_oldest_of_deepest_queue_with_record():
+    csr = _graph()
+    pool = SessionPool(backend="jnp", max_pending=3, overload="shed")
+    pool.bind("deep", csr)
+    pool.bind("shallow", csr)
+    s = random_updates(csr, 20, seed=1)
+    pool.submit("deep", s.batch(0, 8))
+    pool.submit("deep", s.batch(1, 8))
+    pool.submit("shallow", s.batch(0, 8))
+    pool.submit("shallow", s.batch(1, 8))       # sheds deep's oldest
+    assert pool.pending() == 3
+    assert pool.health.shed == 1
+    recs = pool.shed_records.records()
+    assert len(recs) == 1
+    r = recs[0].as_dict()
+    assert recs[0].reasons[0].kind == "pool_saturated"
+    assert "deep" in recs[0].reasons[0].detail
+    assert recs[0].batch is not None            # replayable
+    assert r["n_adds"] + r["n_dels"] > 0
+    # deep lost its FIRST request: after drain its cursor is 1, not 2
+    pool.drain()
+    assert pool.session("deep").stream_cursor == 1
+    assert pool.session("shallow").stream_cursor == 2
+
+
+def test_round_robin_fairness():
+    """A tenant with a deep queue cannot starve others: each round takes
+    at most one request per tenant, so everyone's first request executes
+    in round one regardless of queue depths."""
+    csr = _graph()
+    pool = SessionPool(backend="jnp", max_pending=64)
+    order = []
+    for t in range(3):
+        pool.bind(f"t{t}", csr)
+    s = random_updates(csr, 20, seed=1)
+    for i in range(5):
+        pool.submit("t0", s.batch(i % 3, 8))    # hog
+    pool.submit("t1", s.batch(0, 8))
+    pool.submit("t2", s.batch(0, 8))
+    pool.drain()
+    # all queues fully drained, and the non-hogs each applied exactly one
+    assert pool.pending() == 0
+    assert pool.session("t0").stream_cursor == 5
+    assert pool.session("t1").stream_cursor == 1
+    assert pool.session("t2").stream_cursor == 1
+
+
+def test_submit_unknown_tenant_raises():
+    pool = SessionPool(backend="jnp")
+    with pytest.raises(KeyError):
+        pool.submit("ghost", None)
+
+
+# ---------------------------------------------------------------------------
+# admission rides along per tenant
+# ---------------------------------------------------------------------------
+
+def test_pool_admission_quarantines_per_tenant():
+    csr = _graph()
+    n = csr.n
+    pool = SessionPool(backend="jnp", admission="quarantine")
+    pool.bind("good", csr)
+    pool.bind("bad", csr)
+    clean = random_updates(csr, 20, seed=1).batch(0, 8)
+    poison = UpdateStream(
+        adds=np.asarray([(n + 5, 0, 1)] * 4, np.int64),
+        dels=np.zeros((0, 2), np.int64)).batch(0, 8)
+    pool.apply_many([("good", clean), ("bad", poison)])
+    assert pool.session("bad").health.quarantined == 1
+    assert len(pool.session("bad").dead_letter) == 1
+    assert pool.session("good").health.quarantined == 0
+    solo = api.bind_graph(csr, backend="jnp")
+    solo.apply(clean)
+    _assert_same_state(pool.session("good"), solo)
+
+
+# ---------------------------------------------------------------------------
+# thread safety: concurrent binds and applies from worker threads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_threaded_stress_eight_workers():
+    """8 threads bind and apply concurrently against one pool; every
+    tenant must end bit-identical to a solo session fed the same
+    batches (the caches they share — compile, stream executables,
+    autotuner, shared engines — are all behind locks now)."""
+    csr = _graph()
+    pool = SessionPool(backend="jnp", max_pending=512)
+    n_workers, n_batches = 8, 3
+    streams = [random_updates(csr, 25, seed=100 + w)
+               for w in range(n_workers)]
+    errors = []
+
+    def worker(w):
+        try:
+            pool.bind(f"w{w}", csr)
+            for i in range(n_batches):
+                pool.apply(f"w{w}", streams[w].batch(i, 8))
+        except Exception as e:        # noqa: BLE001 — surfaced below
+            errors.append((w, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert pool.health.applied == n_workers * n_batches
+    for w in range(n_workers):
+        solo = api.bind_graph(csr, backend="jnp")
+        for i in range(n_batches):
+            solo.apply(streams[w].batch(i, 8))
+        _assert_same_state(pool.session(f"w{w}"), solo, ctx=f"w{w}")
+
+
+@pytest.mark.slow
+def test_threaded_compile_and_bind_race():
+    """The bind path's process-wide caches under contention: 8 threads
+    compile the same program and bind fresh pallas sessions at once.
+    All must resolve to the SAME CompiledProgram (identity — it is the
+    pool's grouping key) and produce working sessions."""
+    csr = _graph(n=32, seed=9)
+    results = []
+
+    def worker():
+        prog = api.compile(program_path("sssp"))
+        sess = prog.bind(csr, backend="pallas")
+        sess.run("DynSSSP", batchSize=8, src=0)
+        results.append((prog, np.asarray(sess.props["dist"])))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 8
+    progs = {id(p) for p, _ in results}
+    assert len(progs) == 1
+    ref = results[0][1]
+    for _, dist in results[1:]:
+        np.testing.assert_array_equal(dist, ref)
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+def test_next_pow2_buckets():
+    assert [next_pow2(k) for k in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_shared_engine_scoped_and_clearable():
+    e1 = registry.shared_engine("jnp", scope=(None, 48))
+    e2 = registry.shared_engine("jnp", scope=(None, 48))
+    e3 = registry.shared_engine("jnp", scope=(None, 32))
+    assert e1 is e2 and e1 is not e3
+    registry.clear_shared_engines()
+    assert registry.shared_engine("jnp", scope=(None, 48)) is not e1
+
+
+def test_pool_validates_knobs():
+    with pytest.raises(ValueError):
+        SessionPool(batch_mode="magic")
+    with pytest.raises(ValueError):
+        SessionPool(overload="panic")
+    with pytest.raises(ValueError):
+        SessionPool(max_pending=0)
+    csr = _graph(n=16, seed=1)
+    pool = SessionPool(backend="jnp")
+    pool.bind("a", csr)
+    with pytest.raises(ValueError):
+        pool.bind("a", csr)               # duplicate tenant
+
+
+def test_stats_snapshot_is_jsonable():
+    import json
+    csr = _graph(n=16, seed=1)
+    pool = SessionPool(backend="jnp")
+    pool.bind("a", csr)
+    pool.apply("a", random_updates(csr, 20, seed=1).batch(0, 4))
+    s = pool.stats()
+    json.dumps(s)                         # must not raise
+    assert s["tenants"] == 1 and s["applied"] == 1
