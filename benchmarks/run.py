@@ -15,6 +15,10 @@
                       overhead; ISSUE 8 < 5% gate, warn-only)
   serve               multi-tenant session pool: p50/p99 tick latency,
                       batched-vs-sequential speedup, sessions/device
+  dist                sharded-backend weak scaling (per-batch cost,
+                      bytes/shard at 1/2/4/8 shards); forces 8 virtual
+                      host devices, so it is NOT part of --suite all —
+                      run it explicitly (or via benchmarks/dist_sharded.py)
 
 Output: ``name,us_per_call,derived`` CSV lines on stdout AND a
 machine-readable ``BENCH_<suite>.json`` at the repo root per suite run —
@@ -38,7 +42,8 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "dynamic_vs_static", "stream", "tc",
                              "merge_policy", "scheduling", "static_baselines",
-                             "pallas", "roofline", "robustness", "serve"])
+                             "pallas", "roofline", "robustness", "serve",
+                             "dist"])
     ap.add_argument("--small", action="store_true", default=True,
                     help="reduced graph sizes (CI-speed; default on CPU)")
     ap.add_argument("--full", dest="small", action="store_false",
@@ -46,6 +51,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: reduced engine × percent grids")
     args = ap.parse_args()
+
+    if args.suite == "dist":
+        # must precede the first jax import (common imports jax): the
+        # weak-scaling rows need a multi-device host platform
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     import common
 
@@ -93,6 +105,10 @@ def main() -> None:
         import serve
         suite("serve", lambda: serve.run(small=args.small,
                                          quick=args.quick))
+    if args.suite == "dist":                 # explicit only, see above
+        import dist_sharded
+        suite("dist", lambda: dist_sharded.run(small=args.small,
+                                               quick=args.quick))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,9 @@ algorithm/schedule separation, StarPlat's resident Batch-loop driver:
 
 Backends are resolved by name through ``repro.core.registry``;
 ``register_engine`` plugs new engines in without touching this facade.
+Backend options ride ``bind(**opts)`` — e.g. the sharded backend's
+mesh knobs, ``bind(csr, backend="dist_sharded", num_shards=8,
+partitioner="degree")``.
 Hand-staged algorithms (``repro.algos``) ride the same session via
 ``bind_graph`` — an algorithm-agnostic session owning the resident
 handle — and its ``call``/``run_stream`` helpers.
@@ -1210,9 +1213,12 @@ def restore_session(ckpt_dir, backend: Optional[str] = None,
     * same backend kind — **bit-exact**: the raw handle leaves (diff
       pool, tombstones, ELL pack) are restored, so resumed streaming is
       bit-identical to the uninterrupted run;
-    * the dist backend re-partitions its canonical edge list onto the
-      *current* mesh — an elastic restore may come back on a different
-      device count (value-exact for order-independent reductions);
+    * the dist backends (``dist`` / ``dist_sharded``) re-partition
+      their canonical edge list onto the *current* mesh — an elastic
+      restore may come back on a different device count
+      (``restore_session(dir, num_shards=M)``) or, for the sharded
+      backend, a different row partitioner (value-exact for
+      order-independent reductions);
     * naming a **different** backend converts through the canonical
       alive-edge list and re-``prepare``s (value-preserving, pool
       layout reset).

@@ -110,6 +110,14 @@ class DistCollectives(Collectives):
         return jax.lax.pmax(jnp.max(x), self.axis)
 
 
+def _host_fetch(tree):
+    """ONE host transfer for a whole pytree of device arrays.  The
+    monkeypatchable seam ``tests/test_perf_debts.py`` pins: pack_state's
+    edge harvest must cost one sync per save, not one per shard
+    (DESIGN.md §3 debt #6)."""
+    return jax.device_get(tree)
+
+
 def _pcombine(red: Reduce, x, axis: str):
     if red.kind in ("min", "argmin"):
         return jax.lax.pmin(x, axis)
@@ -218,6 +226,11 @@ class _DistStreamView(Engine):
 class DistEngine(Engine):
     name = "dist"
 
+    # shared_engine keys instances of mesh-bound engines by their shard
+    # count: an engine prepared for one mesh must never be handed to a
+    # tenant expecting another (see registry.shared_engine).
+    mesh_scoped = True
+
     def __init__(self, num_shards: int | None = None, axis: str = "data",
                  devices=None):
         devices = devices if devices is not None else jax.devices()
@@ -297,23 +310,23 @@ class DistEngine(Engine):
     def _gather_edges(self, dg: DistGraph):
         """Host-gather the global alive edge set ``(src, dst, w)`` from
         the stacked shards — shared by ``merge`` and ``pack_state``
-        (shard-count-independent, so it is also the re-mesh format)."""
+        (shard-count-independent, so it is also the re-mesh format).
+
+        The concatenations mirror ``DynGraph.edge_arrays`` on the
+        stacked ``(P, ·)`` lanes so the whole harvest is ONE host
+        transfer instead of one per shard (debt #6); the row-major
+        flatten preserves the per-shard ``[main, diff]`` lane order of
+        the old per-shard loop bit-exactly."""
         n = dg.n
-        srcs, dsts, ws = [], [], []
-        for p in range(self.P):
-            g = DynGraph(
-                offsets=jnp.asarray(dg.offsets[p]), src=jnp.asarray(dg.src[p]),
-                dst=jnp.asarray(dg.dst[p]), w=jnp.asarray(dg.w[p]),
-                alive=jnp.asarray(dg.alive[p]),
-                d_offsets=jnp.asarray(dg.d_offsets[p]),
-                d_src=jnp.asarray(dg.d_src[p]), d_dst=jnp.asarray(dg.d_dst[p]),
-                d_w=jnp.asarray(dg.d_w[p]), d_alive=jnp.asarray(dg.d_alive[p]),
-                overflow=jnp.asarray(dg.overflow[p]), n=n)
-            es, ed, ew, ea = (np.asarray(x) for x in g.edge_arrays())
-            keep = ea
-            srcs.append(es[keep]); dsts.append(ed[keep]); ws.append(ew[keep])
-        return (np.concatenate(srcs), np.concatenate(dsts),
-                np.concatenate(ws))
+        es = jnp.concatenate([dg.src, jnp.minimum(dg.d_src, n - 1)], axis=1)
+        ed = jnp.concatenate([dg.dst, dg.d_dst], axis=1)
+        ew = jnp.concatenate([dg.w, dg.d_w], axis=1)
+        ea = jnp.concatenate([dg.alive, dg.d_alive & (dg.d_src < n)], axis=1)
+        es, ed, ew, ea = _host_fetch((es, ed, ew, ea))
+        keep = np.asarray(ea).reshape(-1)
+        return (np.asarray(es).reshape(-1)[keep],
+                np.asarray(ed).reshape(-1)[keep],
+                np.asarray(ew).reshape(-1)[keep])
 
     def merge(self, dg: DistGraph,
               diff_capacity: int | None = None) -> DistGraph:
@@ -536,75 +549,92 @@ class DistEngine(Engine):
                            out_specs=self._pspec())(props)
 
     # -- wedges --------------------------------------------------------------
-    def count_wedges(self, dg: DistGraph, pair_fn: Callable,
-                     lane_flags: Dict[str, jax.Array], out_example):
-        # host-side loop bounds from the stacked offsets
-        offs = np.asarray(dg.offsets)
-        doffs = np.asarray(dg.d_offsets)
-        max_main = int((offs[:, 1:] - offs[:, :-1]).max()) if offs.size else 0
-        max_diff = int((doffs[:, 1:] - doffs[:, :-1]).max()) if doffs.size else 0
+    def _count_wedges_local(self, g: DynGraph, flags: Dict[str, jax.Array],
+                            pair_fn: Callable, out_example,
+                            max_main: int, max_diff: int):
+        """In-shard wedge-count body (already inside shard_map): local
+        wedge enumeration plus all_gather+pmax remote-edge queries — the
+        paper's admitted MPI TC bottleneck, kept deliberately.  Shared
+        with the sharded engine's stream view, which calls it with
+        segment-static bounds."""
         axis = self.axis
+        E, D = g.main_capacity, g.diff_capacity
+        esrc, edst, ew, ealive = g.edge_arrays()
+
+        def global_is_edge(qs, qd):
+            qg = jax.lax.all_gather(jnp.stack([qs, qd]), axis)  # (P,2,L)
+            ans = diffcsr.is_edge(g, qg[:, 0], qg[:, 1])
+            ans = jax.lax.pmax(ans.astype(INT), axis)
+            i = jax.lax.axis_index(axis)
+            return ans[i].astype(BOOL)
+
+        def global_edge_flag(name, qs, qd):
+            fl = flags[name]
+            qg = jax.lax.all_gather(jnp.stack([qs, qd]), axis)
+            p1, f1 = diffcsr._locate_main(g, qg[:, 0], qg[:, 1])
+            p2, f2 = diffcsr._locate_diff(g, qg[:, 0], qg[:, 1])
+            r = jnp.zeros(qg.shape[0:1] + qs.shape, BOOL)
+            r = jnp.where(f1 & g.alive[p1],
+                          fl[jnp.clip(p1, 0, E + D - 1)], r)
+            r = jnp.where(f2 & g.d_alive[p2] & ~f1,
+                          fl[jnp.clip(E + p2, 0, E + D - 1)], r)
+            r = jax.lax.pmax(r.astype(INT), axis)
+            i = jax.lax.axis_index(axis)
+            return r[i].astype(BOOL)
+
+        zero = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((), jnp.asarray(x).dtype), out_example)
+
+        def accumulate(total, j, region):
+            if region == "main":
+                pos = g.offsets[esrc] + j
+                ok = pos < g.offsets[esrc + 1]
+                safe = jnp.clip(pos, 0, max(E - 1, 0))
+                z = g.dst[safe]
+                z_ok = ok & g.alive[safe]
+                nbr_lane = safe
+            else:
+                pos = g.d_offsets[esrc] + j
+                ok = pos < g.d_offsets[esrc + 1]
+                safe = jnp.clip(pos, 0, max(D - 1, 0))
+                z = g.d_dst[safe]
+                z_ok = ok & g.d_alive[safe]
+                nbr_lane = E + safe
+            ctx = WedgeCtx(g, flags, nbr_lane, global_is_edge,
+                           global_edge_flag)
+            contrib = pair_fn(esrc, edst, z, z_ok & ealive, ctx)
+            return jax.tree_util.tree_map(
+                lambda t, c: t + jnp.sum(c), total, contrib)
+
+        total = zero
+        if max_main:
+            total = jax.lax.fori_loop(
+                0, max_main, lambda j, t: accumulate(t, j, "main"), total)
+        if max_diff and D:
+            total = jax.lax.fori_loop(
+                0, max_diff, lambda j, t: accumulate(t, j, "diff"), total)
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t, axis), total)
+
+    def count_wedges(self, dg: DistGraph, pair_fn: Callable,
+                     lane_flags: Dict[str, jax.Array], out_example,
+                     bounds=None):
+        if bounds is not None:
+            max_main, max_diff = bounds
+        else:
+            # host-side loop bounds from the stacked offsets
+            offs = np.asarray(dg.offsets)
+            doffs = np.asarray(dg.d_offsets)
+            max_main = int((offs[:, 1:] - offs[:, :-1]).max()) \
+                if offs.size else 0
+            max_diff = int((doffs[:, 1:] - doffs[:, :-1]).max()) \
+                if doffs.size else 0
 
         def fn(dgl, flags):
             g = _local(dgl)
             flags = {k: v[0] for k, v in flags.items()}
-            E, D = g.main_capacity, g.diff_capacity
-            esrc, edst, ew, ealive = g.edge_arrays()
-
-            def global_is_edge(qs, qd):
-                qg = jax.lax.all_gather(jnp.stack([qs, qd]), axis)  # (P,2,L)
-                ans = diffcsr.is_edge(g, qg[:, 0], qg[:, 1])
-                ans = jax.lax.pmax(ans.astype(INT), axis)
-                i = jax.lax.axis_index(axis)
-                return ans[i].astype(BOOL)
-
-            def global_edge_flag(name, qs, qd):
-                fl = flags[name]
-                qg = jax.lax.all_gather(jnp.stack([qs, qd]), axis)
-                p1, f1 = diffcsr._locate_main(g, qg[:, 0], qg[:, 1])
-                p2, f2 = diffcsr._locate_diff(g, qg[:, 0], qg[:, 1])
-                r = jnp.zeros(qg.shape[0:1] + qs.shape, BOOL)
-                r = jnp.where(f1 & g.alive[p1],
-                              fl[jnp.clip(p1, 0, E + D - 1)], r)
-                r = jnp.where(f2 & g.d_alive[p2] & ~f1,
-                              fl[jnp.clip(E + p2, 0, E + D - 1)], r)
-                r = jax.lax.pmax(r.astype(INT), axis)
-                i = jax.lax.axis_index(axis)
-                return r[i].astype(BOOL)
-
-            zero = jax.tree_util.tree_map(
-                lambda x: jnp.zeros((), jnp.asarray(x).dtype), out_example)
-
-            def accumulate(total, j, region):
-                if region == "main":
-                    pos = g.offsets[esrc] + j
-                    ok = pos < g.offsets[esrc + 1]
-                    safe = jnp.clip(pos, 0, max(E - 1, 0))
-                    z = g.dst[safe]
-                    z_ok = ok & g.alive[safe]
-                    nbr_lane = safe
-                else:
-                    pos = g.d_offsets[esrc] + j
-                    ok = pos < g.d_offsets[esrc + 1]
-                    safe = jnp.clip(pos, 0, max(D - 1, 0))
-                    z = g.d_dst[safe]
-                    z_ok = ok & g.d_alive[safe]
-                    nbr_lane = E + safe
-                ctx = WedgeCtx(g, flags, nbr_lane, global_is_edge,
-                               global_edge_flag)
-                contrib = pair_fn(esrc, edst, z, z_ok & ealive, ctx)
-                return jax.tree_util.tree_map(
-                    lambda t, c: t + jnp.sum(c), total, contrib)
-
-            total = zero
-            if max_main:
-                total = jax.lax.fori_loop(
-                    0, max_main, lambda j, t: accumulate(t, j, "main"), total)
-            if max_diff and D:
-                total = jax.lax.fori_loop(
-                    0, max_diff, lambda j, t: accumulate(t, j, "diff"), total)
-            return jax.tree_util.tree_map(
-                lambda t: jax.lax.psum(t, axis), total)
+            return self._count_wedges_local(g, flags, pair_fn, out_example,
+                                            max_main, max_diff)
 
         flag_specs = {k: P(self.axis) for k in lane_flags}
         return self._shmap(

@@ -40,6 +40,7 @@ class DuplicateBackendError(ValueError):
 _BUILTIN_PATHS: Dict[str, str] = {
     "jnp": "repro.core.engine:JnpEngine",
     "dist": "repro.core.dist:DistEngine",
+    "dist_sharded": "repro.shard.engine:ShardedEngine",
     "pallas": "repro.core.pallas_engine:PallasEngine",
     "pallas_chained": "repro.core.pallas_engine:PallasChainedEngine",
     "frontier": "repro.core.frontier_engine:FrontierEngine",
@@ -120,13 +121,43 @@ _SHARED_ENGINES: Dict[Tuple, Engine] = {}
 _SHARED_LOCK = threading.Lock()
 
 
+def _device_count() -> int:
+    """Process-wide device count (lazy jax import; monkeypatch seam for
+    the mesh-key regression test in tests/test_serve.py)."""
+    import jax
+    return len(jax.devices())
+
+
+def _mesh_token(name: str, options: Dict[str, Any]):
+    """Extra shared-key component for mesh-bound engines (those with a
+    ``mesh_scoped`` class attribute, e.g. dist/dist_sharded): the shard
+    count the factory would resolve.  Without it a SessionPool could
+    hand a 4-shard tenant an engine whose mesh was built for a
+    different device set — same name, same scope, incompatible
+    compiled executables and shardings."""
+    try:
+        factory = engine_factory(name)
+    except UnknownBackendError:
+        return None
+    if not getattr(factory, "mesh_scoped", False):
+        return None
+    shards = options.get("num_shards")
+    if not shards:
+        devs = options.get("devices")
+        shards = len(devs) if devs is not None else _device_count()
+    return ("mesh", int(shards))
+
+
 def shared_engine(name: str, scope: Any = None, **options) -> Engine:
-    """One cached engine instance per ``(name, scope, options)`` — the
-    pool's shared-executable binding.  ``scope`` must capture whatever
-    per-graph host state the engine carries (vertex count at minimum);
-    callers that cannot guarantee a safe scope should use
-    :func:`make_engine` and pay the per-session compiles."""
-    key = (name, scope, tuple(sorted(options.items())))
+    """One cached engine instance per ``(name, scope, mesh, options)``
+    — the pool's shared-executable binding.  ``scope`` must capture
+    whatever per-graph host state the engine carries (vertex count at
+    minimum); mesh-bound engines additionally key by the shard count
+    they would resolve (see :func:`_mesh_token`); callers that cannot
+    guarantee a safe scope should use :func:`make_engine` and pay the
+    per-session compiles."""
+    key = (name, scope, _mesh_token(name, options),
+           tuple(sorted(options.items())))
     with _SHARED_LOCK:
         eng = _SHARED_ENGINES.get(key)
         if eng is None:
@@ -151,6 +182,7 @@ DEFAULT_CHAIN: Dict[str, tuple] = {
     "pallas_chained": ("jnp",),
     "frontier": ("jnp",),
     "dist": ("jnp",),
+    "dist_sharded": ("dist", "jnp"),
 }
 
 

@@ -1,0 +1,6 @@
+"""Sharded DynGraph backend: the graph *itself* partitioned across
+devices, with halo (ghost-region) exchange of boundary property values
+(DESIGN.md §5).  Registered as backend ``"dist_sharded"``."""
+from repro.shard.engine import ShardedEngine, ShardGraph, LocalShard
+
+__all__ = ["ShardedEngine", "ShardGraph", "LocalShard"]

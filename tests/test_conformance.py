@@ -7,9 +7,13 @@ green.
 Backends are addressed by registry name — a newly registered engine
 joins the matrix by adding its name to the lists below.
 
-The dist column pays a large shard_map tracing cost per case (~1 min on
-CPU), so only one representative dist cell per program stays in the
+The dist and dist_sharded columns pay a large shard_map tracing cost
+per case (~1 min on CPU, growing with the mesh width), so only one
+representative cell per (program, distributed backend) stays in the
 fast lane; the rest carry the `slow` marker and run in the full lane.
+On a single-device host the distributed columns run at one shard; CI's
+dist-smoke job re-runs the dist_sharded fast cells on 8 virtual host
+devices.
 """
 import pytest
 
@@ -20,7 +24,7 @@ from conformance import (assert_pagerank, assert_pagerank_save_restore,
                          assert_tc, assert_tc_stream, digraph_scenario,
                          sym_scenario)
 
-BACKENDS = ["jnp", "dist", "pallas"]
+BACKENDS = ["jnp", "dist", "dist_sharded", "pallas"]
 
 SSSP_SCENARIOS = ["batch1", "batch8", "batch64", "empty", "self_loops",
                   "dup_in_batch", "del_then_readd"]
@@ -32,9 +36,10 @@ DIST_FAST = {"batch64"}
 
 
 # backends whose cells mostly run in the slow lane (one fast
-# representative each): dist pays shard_map tracing, pallas_chained is
-# the pre-fusion baseline kept honest by one cell per program.
-_MOSTLY_SLOW = {"dist", "pallas_chained"}
+# representative each): dist and dist_sharded pay shard_map tracing,
+# pallas_chained is the pre-fusion baseline kept honest by one cell per
+# program.
+_MOSTLY_SLOW = {"dist", "dist_sharded", "pallas_chained"}
 
 
 def _cells(scenarios, backends, fast=DIST_FAST, prefix=""):
@@ -63,9 +68,16 @@ def test_conformance_pagerank(scenario, backend):
 
 # TC's wedge enumeration on the dist backend is the paper's admitted MPI
 # bottleneck; the two fast engines cover the kernel surface here while
-# test_backends.py keeps one dist TC case.
+# test_backends.py keeps one dist TC case.  dist_sharded joins the
+# column (halo'd wedge bounds make sharded TC work) with its own fast
+# representative — DIST_FAST names no symmetric scenario.
+TC_FAST = {"sym_batch2"}
+
+
 @pytest.mark.parametrize("scenario,backend",
-                         _cells(TC_SCENARIOS, ["jnp", "pallas"]))
+                         _cells(TC_SCENARIOS,
+                                ["jnp", "dist_sharded", "pallas"],
+                                fast=TC_FAST))
 def test_conformance_tc(scenario, backend):
     assert_tc(backend, sym_scenario(scenario))
 
@@ -100,9 +112,13 @@ def test_stream_conformance_pagerank(scenario, backend):
     assert_pagerank_stream(backend, digraph_scenario(scenario))
 
 
+# dist refuses wedge enumeration inside the fused scan (no static
+# bounds); dist_sharded provides them, so the sharded column is the
+# FIRST distributed engine in the streaming-TC row.
 @pytest.mark.parametrize("scenario,backend",
-                         _cells(STREAM_TC, ["jnp", "pallas"],
-                                fast=DIST_STREAM_FAST, prefix="stream-"))
+                         _cells(STREAM_TC,
+                                ["jnp", "dist_sharded", "pallas"],
+                                fast=TC_FAST, prefix="stream-"))
 def test_stream_conformance_tc(scenario, backend):
     assert_tc_stream(backend, sym_scenario(scenario))
 
@@ -118,6 +134,10 @@ def test_stream_conformance_tc(scenario, backend):
 
 POISON_SCENARIOS = ["batch8", "batch64"]
 POISON_POLICIES = ["clamp", "quarantine"]
+# the admission guard sits in front of the engine, so its cells need
+# one distributed representative, not two: dist covers the shard_map
+# column and dist_sharded stays out of the poison grid
+POISON_BACKENDS = [b for b in BACKENDS if b != "dist_sharded"]
 
 
 def _poison_cells(scenarios, backends, fast=DIST_FAST):
@@ -134,15 +154,15 @@ def _poison_cells(scenarios, backends, fast=DIST_FAST):
 
 
 @pytest.mark.parametrize("scenario,backend,policy",
-                         _poison_cells(POISON_SCENARIOS, BACKENDS))
+                         _poison_cells(POISON_SCENARIOS, POISON_BACKENDS))
 def test_conformance_sssp_poison(scenario, backend, policy):
     assert_sssp_poison(backend, digraph_scenario(scenario), policy)
 
 
 @pytest.mark.parametrize("scenario,backend,policy",
                          _poison_cells(["batch8"],
-                                       BACKENDS + ["pallas_chained",
-                                                   "frontier"],
+                                       POISON_BACKENDS + ["pallas_chained",
+                                                          "frontier"],
                                        fast=DIST_STREAM_FAST))
 def test_stream_conformance_sssp_poison(scenario, backend, policy):
     assert_sssp_stream_poison(backend, digraph_scenario(scenario), policy)
@@ -157,7 +177,8 @@ def test_stream_conformance_sssp_poison(scenario, backend, policy):
 # alongside pallas_chained per the _MOSTLY_SLOW convention.
 # ---------------------------------------------------------------------------
 
-DURABLE_BACKENDS = ["jnp", "dist", "pallas", "pallas_chained", "frontier"]
+DURABLE_BACKENDS = ["jnp", "dist", "dist_sharded", "pallas",
+                    "pallas_chained", "frontier"]
 
 
 @pytest.mark.parametrize("scenario,backend",
@@ -165,6 +186,17 @@ DURABLE_BACKENDS = ["jnp", "dist", "pallas", "pallas_chained", "frontier"]
                                 prefix="ckpt-"))
 def test_conformance_sssp_save_restore(scenario, backend, tmp_path):
     assert_sssp_save_restore(backend, digraph_scenario(scenario), tmp_path)
+
+
+# elastic re-mesh: save on the full mesh, restore onto half of it (on a
+# single-device host this degenerates to 1 -> 1, which still walks the
+# pack/re-partition path; CI's dist-smoke job runs it at 8 -> 4)
+@pytest.mark.slow
+def test_conformance_sssp_save_restore_remesh(tmp_path):
+    import jax
+    m = max(1, len(jax.devices()) // 2)
+    assert_sssp_save_restore("dist_sharded", digraph_scenario("batch8"),
+                             tmp_path, restore_opts={"num_shards": m})
 
 
 # float bit-exactness: raw-leaf restore preserves the diff-pool layout

@@ -16,6 +16,11 @@ Plus #5 (PR 7): session ``apply`` read the (overflow, used, dead)
 triple twice per attempt (a pre-read to establish the baseline and a
 post-read to detect overflow) — ``_retry_on_overflow`` now reads it
 ONCE post-attempt against the running ``_of_base``.
+
+Plus #6 (PR 10): ``DistEngine.pack_state``'s ``_gather_edges`` pulled
+the stacked edge lanes to host one device_get per array (and per shard
+before that) — the harvest is now ONE fused ``_host_fetch`` of the
+whole lane pytree per save.
 """
 import dataclasses
 
@@ -149,6 +154,51 @@ def test_baseline_run_stream_syncs_counters_once_per_batch():
     assert eng.counter_syncs == 1 + nb, (
         f"baseline dispatch synced {eng.counter_syncs}x for {nb} batches; "
         f"want 1 initial + 1 per batch")
+
+
+# ---------------------------------------------------------------------------
+# #6: one host sync per dist pack_state, diff pool included
+# ---------------------------------------------------------------------------
+
+def test_dist_pack_state_one_host_sync(monkeypatch):
+    from repro.core import dist as dist_mod
+    from repro.core.engine import JnpEngine, state_to_csr
+
+    csr = _graph(seed=23)
+    eng = dist_mod.DistEngine()
+    g = eng.prepare(csr, diff_capacity=64)
+    ups = random_updates(csr, percent=30, seed=4)
+    b = ups.batch(0, max(ups.num_adds, ups.num_dels, 1))
+    g = eng.update_del(g, b)
+    g = eng.update_add(g, b)                  # populated diff pool
+
+    calls = {"n": 0}
+    real = dist_mod._host_fetch
+
+    def counting(tree):
+        calls["n"] += 1
+        return real(tree)
+
+    monkeypatch.setattr(dist_mod, "_host_fetch", counting)
+    tree, meta = eng.pack_state(g)
+    assert calls["n"] == 1, (
+        f"pack_state cost {calls['n']} host syncs; the whole edge "
+        f"harvest must be one fused transfer")
+
+    # the fused harvest is a pure layout change: the packed edge set
+    # must equal the jnp engine's canonical view of the same state
+    jeng = JnpEngine()
+    jg = jeng.prepare(csr, diff_capacity=64)
+    jg = jeng.update_del(jg, b)
+    jg = jeng.update_add(jg, b)
+    jtree, jmeta = jeng.pack_state(jg)
+    ref, _ = state_to_csr(jtree, jmeta)
+    packed = np.stack([np.asarray(tree["src"]), np.asarray(tree["dst"]),
+                       np.asarray(tree["w"])], 1)
+    want = np.stack([np.asarray(ref.src), np.asarray(ref.dst),
+                     np.asarray(ref.w)], 1)
+    order = lambda e: e[np.lexsort((e[:, 2], e[:, 1], e[:, 0]))]
+    np.testing.assert_array_equal(order(packed), order(want))
 
 
 # ---------------------------------------------------------------------------

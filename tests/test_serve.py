@@ -383,6 +383,35 @@ def test_shared_engine_scoped_and_clearable():
     assert registry.shared_engine("jnp", scope=(None, 48)) is not e1
 
 
+def test_shared_engine_keys_by_device_mesh(monkeypatch):
+    # PR 10 regression: mesh-bound engines (dist / dist_sharded) key the
+    # shared-engine cache by the shard count they would resolve — a
+    # pooled tenant must never be handed an engine whose mesh was built
+    # for a different device set.  The device count is read through the
+    # registry._device_count seam so the cache behaviour is testable on
+    # a single-device host.
+    monkeypatch.setattr(registry, "_device_count", lambda: 4)
+    assert registry._mesh_token("dist", {}) == ("mesh", 4)
+    monkeypatch.setattr(registry, "_device_count", lambda: 8)
+    assert registry._mesh_token("dist", {}) == ("mesh", 8)
+    # explicit options win over the process device count
+    assert registry._mesh_token("dist", {"num_shards": 2}) == ("mesh", 2)
+    assert registry._mesh_token("dist_sharded",
+                                {"num_shards": 2}) == ("mesh", 2)
+    assert registry._mesh_token("dist", {"devices": [0, 0, 0]}) \
+        == ("mesh", 3)
+    # non-mesh engines carry no token and never split on device count
+    assert registry._mesh_token("jnp", {}) is None
+
+    monkeypatch.setattr(registry, "_device_count", lambda: 4)
+    d1 = registry.shared_engine("dist", scope=(None, 48))
+    assert registry.shared_engine("dist", scope=(None, 48)) is d1
+    j1 = registry.shared_engine("jnp", scope=(None, 48))
+    monkeypatch.setattr(registry, "_device_count", lambda: 8)
+    assert registry.shared_engine("dist", scope=(None, 48)) is not d1
+    assert registry.shared_engine("jnp", scope=(None, 48)) is j1
+
+
 def test_pool_validates_knobs():
     with pytest.raises(ValueError):
         SessionPool(batch_mode="magic")
